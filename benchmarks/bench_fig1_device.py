@@ -1,0 +1,40 @@
+"""Fig 1 / S4: memristor device statistics -- V_th/V_hold fits, OU stability,
+endurance."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import device
+
+
+def run():
+    params = device.DEFAULT_PARAMS
+    key = jax.random.PRNGKey(0)
+
+    # cycle-to-cycle stochasticity (paper: V_th 2.08 +/- 0.28 V, V_hold 0.98 +/- 0.30 V)
+    path = np.asarray(device.sample_ou_path(key, 20000, params))
+    us = timeit(lambda: device.sample_ou_path(key, 20000, params))
+    emit("fig1.vth_cycle_stats", us,
+         f"mean={path.mean():.3f}V(paper 2.08) std={path.std():.3f}V(paper 0.28)")
+
+    # device-to-device CV (paper ~8%)
+    mus = np.asarray(device.sample_devices(jax.random.PRNGKey(1), 1000))
+    emit("fig1.d2d_cv", 0.0, f"cv={mus.std()/mus.mean()*100:.1f}%(paper ~8%)")
+
+    # OU fit (Fig S4): recovered parameters
+    theta, mu, sigw = device.fit_ou(path)
+    emit("figS4.ou_fit", 0.0,
+         f"theta={theta:.3f}(cfg {params.ou_theta}) mu={mu:.3f} sigma_w={sigw:.3f}")
+
+    # endurance (Fig 1e): HRS/LRS separation over cycles
+    hrs, lrs = device.endurance_trace(jax.random.PRNGKey(2), 100000)
+    ratio = float(np.min(np.asarray(hrs)) / np.max(np.asarray(lrs)))
+    emit("fig1e.endurance_1e5cycles", 0.0,
+         f"min_HRS/max_LRS={ratio:.0f}(paper ~1e5 ratio; stable)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Fig 2: SNE transfer curves + probabilistic AND/MUX hardware-test analogue."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import bitops, logic, sne
+from repro.core.logic import Corr
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    # Fig 2b / 2c transfer curves: encoder hits the sigmoid-programmed P
+    n = 1 << 14
+    for v_in in (1.8, 2.24, 2.8):
+        p_t = float(sne.p_from_vin(v_in))
+        est = float(bitops.decode(
+            sne.encode_uncorrelated(jax.random.fold_in(key, int(v_in * 100)),
+                                    p_t, n), n))
+        emit(f"fig2b.P_unc(Vin={v_in}V)", 0.0,
+             f"target={p_t:.3f} measured={est:.3f}")
+    for v_ref in (0.4, 0.57, 0.75):
+        p_t = float(sne.p_from_vref(v_ref))
+        est = float(bitops.decode(
+            sne.encode_uncorrelated(jax.random.fold_in(key, int(v_ref * 1e3)),
+                                    p_t, n), n))
+        emit(f"fig2c.P_corr(Vref={v_ref}V)", 0.0,
+             f"target={p_t:.3f} measured={est:.3f}")
+
+    # Fig 2e: probabilistic AND / MUX at 100-bit (the paper's demo length)
+    pa, pb, ps = 0.8, 0.6, 0.5
+    for mode in (Corr.UNCORRELATED, Corr.POSITIVE, Corr.NEGATIVE):
+        ests = [
+            float(logic.prob_and(jax.random.fold_in(key, i), pa, pb, 100, mode)[1])
+            for i in range(50)
+        ]
+        expect = float(logic.expected_and(pa, pb, mode))
+        emit(f"fig2e.AND[{mode.value}]@100bit", 0.0,
+             f"expect={expect:.3f} mean={np.mean(ests):.3f} std={np.std(ests):.3f}")
+    us = timeit(
+        jax.jit(lambda k: logic.prob_mux(k, ps, pa, pb, 100)[1]), key
+    )
+    ests = [float(logic.prob_mux(jax.random.fold_in(key, i), ps, pa, pb, 100)[1])
+            for i in range(50)]
+    emit("fig2e.MUX@100bit", us,
+         f"expect={float(logic.expected_mux(ps,pa,pb)):.3f} mean={np.mean(ests):.3f}")
+
+    # precision vs bit length (the paper's cost/precision trade-off note)
+    for nbits in (100, 1000, 10000):
+        errs = [
+            abs(float(logic.prob_and(jax.random.fold_in(key, 100 + i), pa, pb,
+                                     nbits, Corr.UNCORRELATED)[1]) - pa * pb)
+            for i in range(20)
+        ]
+        emit(f"fig2.precision@{nbits}bit", 0.0, f"mean_abs_err={np.mean(errs):.4f}")
+
+
+if __name__ == "__main__":
+    run()

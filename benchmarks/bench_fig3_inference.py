@@ -1,0 +1,74 @@
+"""Fig 3: Bayesian inference operator -- route planning + correlation matrices."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import correlation, graph, inference
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    n100 = 100
+
+    # Fig 3b route-planning case: P(A)=57%, evidence -> posterior in 61-63% band
+    ests = [
+        float(inference.bayes_inference(jax.random.fold_in(key, i),
+                                        0.57, 0.72, 0.6, n_bits=n100).posterior_ratio)
+        for i in range(100)
+    ]
+    theory = float(inference.analytic_posterior(0.57, 0.72, 0.6))
+    emit("fig3b.route_planning@100bit", 0.0,
+         f"theory={theory*100:.0f}%(paper ~61%) hw_mean={np.mean(ests)*100:.0f}% "
+         f"hw_std={np.std(ests)*100:.1f}% decision=cut-in(P(A|B)>P(A))")
+
+    # accuracy across a prior/likelihood grid at the paper's bit length
+    grid_err = []
+    for pa in (0.2, 0.4, 0.6, 0.8):
+        for pba in (0.3, 0.6, 0.9):
+            tr = [
+                float(inference.bayes_inference(
+                    jax.random.fold_in(key, hash((pa, pba, i)) % 2**31),
+                    pa, pba, 0.5, n_bits=n100).posterior_ratio)
+                for i in range(20)
+            ]
+            grid_err.append(abs(np.mean(tr) - float(
+                inference.analytic_posterior(pa, pba, 0.5))))
+    emit("fig3.grid_accuracy@100bit", 0.0,
+         f"mean_abs_err={np.mean(grid_err):.3f} max={np.max(grid_err):.3f}")
+
+    # Fig 3c/3d: pairwise correlations at the operator's key nodes
+    tr = inference.bayes_inference(key, 0.57, 0.72, 0.6, n_bits=1 << 14)
+    names = list(tr.streams)
+    rho = correlation.correlation_matrix(tr.streams, tr.n_bits, "pearson")
+    scc = correlation.correlation_matrix(tr.streams, tr.n_bits, "scc")
+    iA, iN, iD = names.index("A"), names.index("numer"), names.index("denom")
+    emit("fig3c.pearson", 0.0,
+         f"rho(A,B|A)={float(rho[iA, names.index('B|A')]):.2f}(design 0) "
+         f"rho(numer,denom)={float(rho[iN, iD]):.2f}(design >0)")
+    emit("fig3d.scc", 0.0,
+         f"scc(numer,denom)={float(scc[iN, iD]):.2f}(design ~1: CORDIV subset)")
+
+    # Fig S8 graphs
+    cpt = jnp.array([[0.1, 0.4], [0.6, 0.9]])
+    _, pr, an = graph.two_parent_one_child(key, 0.6, 0.3, cpt, n_bits=1 << 13)
+    emit("figS8b.two_parent", 0.0, f"est={float(pr):.3f} theory={float(an):.3f}")
+    _, pr2, an2 = graph.one_parent_two_child(key, 0.5, (0.9, 0.2), (0.8, 0.3),
+                                             n_bits=1 << 13)
+    emit("figS8c.one_parent_two_child", 0.0,
+         f"est={float(pr2):.3f} theory={float(an2):.3f}")
+
+    # throughput of the jitted operator (batched: 4096 inferences at once)
+    pa_v = jnp.full((4096,), 0.57)
+    fn = jax.jit(lambda k: inference.bayes_inference(k, pa_v, 0.72, 0.6,
+                                                     n_bits=128).posterior_ratio)
+    us = timeit(fn, key)
+    emit("fig3.batched_operator_4096@128bit", us,
+         f"{4096 / (us / 1e6):.0f} inferences/s on 1 CPU core")
+
+
+if __name__ == "__main__":
+    run()

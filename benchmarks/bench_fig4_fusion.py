@@ -1,0 +1,71 @@
+"""Fig 4 / Movie S1: RGB+thermal Bayesian fusion on synthetic FLIR-like scenes.
+
+Measures the paper's claims: fusion recovers targets missed by single
+modalities (paper: +85% vs thermal, +19% vs RGB detection chances in the video
+demo) and raises decision confidence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import fusion
+from repro.data import detection
+from repro.kernels.fusion_map.ops import fusion_map
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    cfg = detection.SceneConfig(height=64, width=64)
+
+    n_scenes = 30
+    tp_rgb, tp_th, tp_fused = [], [], []
+    conf_rgb, conf_th, conf_fused = [], [], []
+    for i in range(n_scenes):
+        gt, p_rgb, p_th, night = detection.make_scene(jax.random.fold_in(key, i), cfg)
+        p_modal = jnp.stack(
+            [jnp.stack([p_rgb, 1 - p_rgb], -1), jnp.stack([p_th, 1 - p_th], -1)]
+        )                                           # (2, H, W, 2)
+        fused = fusion_map(p_modal.reshape(2, -1, 2))[:, 0].reshape(gt.shape)
+        for p, tps, confs in ((p_rgb, tp_rgb, conf_rgb), (p_th, tp_th, conf_th),
+                              (fused, tp_fused, conf_fused)):
+            tp, fp, conf = detection.detection_metrics(gt, p)
+            tps.append(float(tp))
+            confs.append(float(conf))
+
+    r, t, f = np.mean(tp_rgb), np.mean(tp_th), np.mean(tp_fused)
+    emit("fig4b.detection_rate", 0.0,
+         f"rgb={r:.2f} thermal={t:.2f} fused={f:.2f} "
+         f"gain_vs_thermal=+{(f/t-1)*100:.0f}%(paper +85%) "
+         f"gain_vs_rgb=+{(f/r-1)*100:.0f}%(paper +19%)")
+    emit("fig4b.confidence_on_targets", 0.0,
+         f"rgb={np.mean(conf_rgb):.2f} thermal={np.mean(conf_th):.2f} "
+         f"fused={np.mean(conf_fused):.2f}")
+
+    # stochastic circuit path agrees with analytic fusion (one scene)
+    gt, p_rgb, p_th, _ = detection.make_scene(jax.random.fold_in(key, 999), cfg)
+    sel = jnp.stack([p_rgb.reshape(-1)[:64], p_th.reshape(-1)[:64]], axis=-1)
+    stoch = fusion.detection_fusion(jax.random.PRNGKey(7), sel, n_bits=1 << 12)
+    analytic = fusion.fuse_analytic(
+        jnp.stack([jnp.stack([sel[:, 0], 1 - sel[:, 0]], -1),
+                   jnp.stack([sel[:, 1], 1 - sel[:, 1]], -1)], axis=-2)
+    )[:, 0]
+    emit("fig4.stochastic_vs_analytic", 0.0,
+         f"mean_abs_err={float(jnp.mean(jnp.abs(stoch - analytic))):.3f}@4096bit")
+
+    # Movie S1 scale: full-frame fused maps through the Pallas kernel (interp)
+    frame = jnp.stack([
+        jnp.stack([p_rgb, 1 - p_rgb], -1).reshape(-1, 2),
+        jnp.stack([p_th, 1 - p_th], -1).reshape(-1, 2),
+    ])
+    us = timeit(lambda: fusion_map(frame), iters=3)
+    emit("movieS1.frame_fusion_64x64", us,
+         f"{64*64/(us/1e6)/1e6:.2f}Mpix/s (CPU interpret; TPU path is the "
+         f"fusion_map kernel)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Timeliness claim: <0.4 ms/frame (>=2,500 fps) at 100-bit encoding, and the
+TPU-mapped throughput of the packed kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import latency
+from repro.kernels.pand_popcount.ops import pand_popcount
+from repro.kernels.sne_encode.ops import sne_encode
+
+
+def run():
+    # memristor-substrate model (the paper's own numbers)
+    rep = latency.memristor_latency(n_bits=100, n_sne=5)
+    emit("latency.memristor@100bit", rep.frame_latency_s * 1e6,
+         f"{rep.frame_latency_s*1e3:.2f}ms/frame fps={rep.fps:.0f} "
+         f"meets_paper={rep.meets_paper_claim()} "
+         f"energy={rep.energy_per_decision_j*1e9:.1f}nJ/decision")
+    emit("latency.reference_points", 0.0,
+         f"human={latency.HUMAN_REACTION_S} ADAS_fps={latency.ADAS_FPS} "
+         f"camera_fps={latency.CAMERA_FPS} edge_net_fps={latency.EDGE_NET_FPS}")
+
+    # TPU mapping: throughput model + measured CPU-interpret lower bound
+    model = latency.tpu_throughput_model(n_bits=128)
+    emit("latency.tpu_model@128bit", 0.0, f"{model:.2e} decisions/s/core (model)")
+
+    n_dec = 4096
+    key = jax.random.PRNGKey(0)
+    p = jax.random.uniform(key, (2, n_dec, 2))
+
+    def decide(p):
+        streams = sne_encode(key, p, 128)
+        counts = pand_popcount(streams.reshape(2, -1, 4)).reshape(n_dec, 2)
+        return jnp.argmax(counts, -1)
+
+    us = timeit(jax.jit(decide), p, iters=3)
+    emit("latency.packed_pipeline_4096dec@128bit", us,
+         f"{n_dec/(us/1e6):.2e} decisions/s on 1 CPU core (interpret mode; "
+         f"paper hardware: 2.5e3 fps)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the EXPERIMENTS
+tables (also prints a compact summary as a benchmark row)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells(variant: str = "baseline"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        d = json.load(open(path))
+        if d.get("variant", "baseline") != variant and d.get("ok"):
+            continue
+        d["_file"] = os.path.basename(path)
+        cells.append(d)
+    return cells
+
+
+def run():
+    cells = load_cells()
+    ok = [c for c in cells if c.get("ok")]
+    skipped = [c for c in cells if c.get("skipped")]
+    failed = [c for c in cells if not c.get("ok") and not c.get("skipped")]
+    emit("roofline.cells", 0.0,
+         f"ok={len(ok)} skipped={len(skipped)} failed={len(failed)}")
+    for c in ok:
+        if c.get("mesh") != "pod16x16":
+            continue
+        emit(
+            f"roofline.{c['arch']}.{c['shape']}", 0.0,
+            f"compute={c['compute_s']:.2f}s memory={c['memory_s']:.2f}s "
+            f"collective={c['collective_s']:.2f}s bottleneck={c['bottleneck']} "
+            f"useful={c['useful_ratio']:.2f}",
+        )
+    for c in failed:
+        emit(f"roofline.FAILED.{c.get('arch')}.{c.get('shape')}", 0.0,
+             str(c.get("error", ""))[:80])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,144 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from experiments/dryrun/.
+
+Usage: PYTHONPATH=src python -m benchmarks.gen_experiments
+Writes markdown tables to experiments/generated_tables.md which EXPERIMENTS.md
+references verbatim (and the final EXPERIMENTS.md inlines).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRYRUN = os.path.join(HERE, "..", "experiments", "dryrun")
+OUT = os.path.join(HERE, "..", "experiments", "generated_tables.md")
+
+ARCH_ORDER = [
+    "qwen2-72b", "starcoder2-15b", "minitron-4b", "phi3-mini-3.8b",
+    "internvl2-26b", "recurrentgemma-2b", "xlstm-350m",
+    "llama4-scout-17b-a16e", "deepseek-v3-671b", "seamless-m4t-large-v2",
+    "paper-bayes-fusion",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        d = json.load(open(path))
+        key = (d.get("arch"), d.get("shape"), d.get("mesh"),
+               d.get("variant", "baseline"))
+        cells[key] = d
+    return cells
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f} TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f} GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f} MB"
+    return f"{b/1e3:.0f} KB"
+
+
+def dryrun_table(cells, mesh):
+    lines = [
+        "| arch | shape | status | bytes/device (arg+out+temp) | FLOPs/chip | collective schedule |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            if arch == "paper-bayes-fusion" and shape != "train_4k":
+                continue
+            d = cells.get((arch, shape, mesh, "baseline"))
+            if d is None:
+                continue
+            if d.get("skipped"):
+                lines.append(f"| {arch} | {shape} | SKIP | — | — | {d['reason']} |")
+                continue
+            if not d.get("ok"):
+                lines.append(f"| {arch} | {shape} | **FAIL** | — | — | {str(d.get('error'))[:60]} |")
+                continue
+            ma = d.get("memory_analysis", {})
+            mem = (ma.get("argument_size_gb", 0) + ma.get("output_size_gb", 0)
+                   + ma.get("temp_size_gb", 0))
+            sched = ", ".join(
+                f"{k}x{v}" for k, v in sorted(d.get("collective_counts_schedule", {}).items())
+            ) or "none"
+            lines.append(
+                f"| {arch} | {shape} | ok ({d['compile_seconds']}s compile) | "
+                f"{mem:.1f} GB | {d['flops_per_chip']:.2e} | {sched} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck | MODEL/HLO FLOPs | peak mem/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            if arch == "paper-bayes-fusion" and shape != "train_4k":
+                continue
+            d = cells.get((arch, shape, "pod16x16", "baseline"))
+            if d is None or not d.get("ok"):
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {d['compute_s']:.3f} | {d['memory_s']:.3f} | "
+                f"{d['collective_s']:.3f} | **{d['bottleneck']}** | "
+                f"{d['useful_ratio']:.2f} | "
+                f"{fmt_bytes(d.get('peak_memory_bytes', 0))} |"
+            )
+    return "\n".join(lines)
+
+
+def variant_table(cells, arch, shape, variants):
+    lines = [
+        "| variant | compute (s) | memory (s) | collective (s) | bottleneck | temp/chip |",
+        "|---|---|---|---|---|---|",
+    ]
+    for v in variants:
+        d = cells.get((arch, shape, "pod16x16", v))
+        if d is None or not d.get("ok"):
+            lines.append(f"| {v} | — | — | — | (not run) | — |")
+            continue
+        t = d.get("memory_analysis", {}).get("temp_size_gb", 0)
+        lines.append(
+            f"| {v} | {d['compute_s']:.3f} | {d['memory_s']:.3f} | "
+            f"{d['collective_s']:.3f} | {d['bottleneck']} | {t:.1f} GB |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    cells = load()
+    parts = ["# Generated dry-run / roofline tables\n"]
+    parts.append("## Dry-run, single pod (16x16 = 256 chips)\n")
+    parts.append(dryrun_table(cells, "pod16x16"))
+    parts.append("\n## Dry-run, multi-pod (2x16x16 = 512 chips)\n")
+    parts.append(dryrun_table(cells, "pod2x16x16"))
+    parts.append("\n## Roofline (single pod)\n")
+    parts.append(roofline_table(cells))
+    parts.append("\n## Perf variants: qwen2-72b train_4k\n")
+    parts.append(variant_table(cells, "qwen2-72b", "train_4k",
+                               ["baseline", "nosp", "fsdp2d", "fsdp2d+micro2",
+                                "fsdp2d+qchunk1024", "fsdp2d+qchunk2048"]))
+    parts.append("\n## Perf variants: deepseek-v3-671b train_4k\n")
+    parts.append(variant_table(cells, "deepseek-v3-671b", "train_4k",
+                               ["baseline", "micro4", "micro8"]))
+    parts.append("\n## Perf variants: paper-bayes-fusion\n")
+    parts.append(variant_table(cells, "paper-bayes-fusion", "train_4k",
+                               ["baseline", "bits64", "rnginside", "analytic"]))
+    md = "\n".join(parts) + "\n"
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        f.write(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_fig1_device,
+        bench_fig2_logic,
+        bench_fig3_inference,
+        bench_fig4_fusion,
+        bench_latency,
+        bench_roofline,
+        bench_table_s1,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        bench_fig1_device,
+        bench_fig2_logic,
+        bench_table_s1,
+        bench_fig3_inference,
+        bench_fig4_fusion,
+        bench_latency,
+        bench_roofline,
+    ):
+        print(f"# --- {mod.__name__} ---")
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Obstacle detection via RGB+thermal Bayesian fusion (paper Fig 4 / Movie S1)
+on synthetic FLIR-like scenes, through the packed Pallas kernel pipeline.
+
+Run:  PYTHONPATH=src python examples/obstacle_fusion.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import detection
+from repro.kernels.fusion_map.ops import fusion_map
+from repro.kernels.pand_popcount.ops import pand_popcount
+from repro.kernels.sne_encode.ops import sne_encode
+
+key = jax.random.PRNGKey(0)
+cfg = detection.SceneConfig(height=64, width=64, night_fraction=1.0)  # night!
+
+gt, p_rgb, p_th, night = detection.make_scene(key, cfg)
+print(f"night scene: {int(gt.sum())} obstacle pixels")
+
+# single-modal decisions (what the pre-trained edge networks would output)
+for name, p in (("RGB", p_rgb), ("thermal", p_th)):
+    tp, fp, conf = detection.detection_metrics(gt, p)
+    print(f"  {name:8s}: detection {float(tp)*100:5.1f}%  conf {float(conf):.2f}")
+
+# analytic fusion (eq 5) through the fusion_map kernel
+p_modal = jnp.stack([
+    jnp.stack([p_rgb, 1 - p_rgb], -1).reshape(-1, 2),
+    jnp.stack([p_th, 1 - p_th], -1).reshape(-1, 2),
+])
+fused = fusion_map(p_modal)[:, 0].reshape(gt.shape)
+tp, fp, conf = detection.detection_metrics(gt, fused)
+print(f"  fused   : detection {float(tp)*100:5.1f}%  conf {float(conf):.2f}"
+      f"   <- recovers targets both modalities are unsure about")
+
+# stochastic-circuit path on a tile: SNE encode -> packed AND -> popcount
+tile = p_modal[:, :4096, :]                       # (2, pixels, 2)
+streams = sne_encode(jax.random.PRNGKey(1), tile, 256)    # (2, pix, 2, words)
+counts = pand_popcount(streams).astype(jnp.float32)        # (pix, 2)
+stoch = counts[:, 0] / jnp.maximum(counts.sum(-1), 1.0)
+err = float(jnp.mean(jnp.abs(stoch - fused.reshape(-1)[:4096])))
+print(f"\nstochastic circuit (256-bit streams) vs analytic fusion: "
+      f"mean abs err {err:.3f}")
+print("(the hardware operator is this pipeline with memristor entropy; "
+      "<0.4 ms/frame at 100-bit on the paper's substrate)")

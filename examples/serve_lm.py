@@ -1,0 +1,38 @@
+"""Serve a small model with batched requests and the paper's timely-reliable
+Bayes decision gate (fused posteriors + confidence threshold).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import api
+from repro.serve import EngineConfig, Request, ServeEngine
+
+cfg = get_smoke_config("qwen2-72b")
+params = api.init(cfg, jax.random.PRNGKey(0))
+
+engine = ServeEngine(
+    cfg, params,
+    EngineConfig(max_batch=4, t_cache=128, bayes_gate=True,
+                 confidence_threshold=0.5),
+)
+
+rng = np.random.default_rng(0)
+requests = [
+    Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=6 + i).astype(np.int32),
+            max_new_tokens=12)
+    for i in range(4)
+]
+engine.run(jax.random.PRNGKey(1), requests)
+
+print("=== batched serving with Bayes-gated emission ===")
+for r in requests:
+    gated = sum(c >= 0.5 for c in r.confidences)
+    print(f"request {r.rid}: generated {len(r.out_tokens)} tokens | "
+          f"{gated}/{len(r.out_tokens)} emissions cleared the reliability gate | "
+          f"mean fused confidence {np.mean(r.confidences):.2f}")
+print("\n(a rejected emission is the LM analogue of the paper's 'keep lane' "
+      "branch: the decision is withheld until belief clears the threshold)")

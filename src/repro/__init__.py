@@ -1,0 +1,8 @@
+"""repro: memristor-inspired stochastic-computing Bayesian decision framework on JAX.
+
+Reproduction of Song et al., "Hardware implementation of timely reliable Bayesian
+decision-making using memristors" (Adv. Electron. Mater. 2024), adapted to TPU as a
+multi-pod JAX framework. See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

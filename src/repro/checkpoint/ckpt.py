@@ -1,0 +1,146 @@
+"""Sharded, async, atomic checkpointing with elastic (reshard-on-load) restore.
+
+Layout:  <dir>/step_<N>/shard_<host>.npz  +  manifest.json (written LAST -- its
+presence marks the checkpoint committed; partial checkpoints are ignored and
+garbage-collected).  Arrays are stored whole per host here (single-host
+container); the manifest records the logical shapes/dtypes + mesh metadata so a
+restore may target a different mesh/topology (elastic scaling): loaded arrays
+are re-placed with the *new* mesh's shardings by ``jax.device_put``.
+
+Async: ``save()`` snapshots to host memory synchronously (cheap) and writes to
+disk on a background thread, overlapping I/O with the next training steps --
+the standard large-run pattern.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":   # npz cannot round-trip ml_dtypes
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def _unflatten_like(template, arrays: dict):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key} shape {arr.shape} != expected {leaf.shape}"
+            )
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)   # restore bf16 etc. from fp32 storage
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, *, blocking: bool = False, extra: dict | None = None):
+        """Snapshot ``tree`` at ``step``; disk write happens asynchronously."""
+        self.wait()  # one outstanding async save at a time
+        host_arrays = _flatten(tree)          # device->host copy (synchronous)
+        meta = {
+            "step": step,
+            "time": time.time(),
+            "leaves": {k: [list(v.shape), str(v.dtype)] for k, v in host_arrays.items()},
+            "extra": extra or {},
+        }
+
+        def write():
+            tmp = os.path.join(self.directory, f"_tmp_step_{step}")
+            final = os.path.join(self.directory, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "shard_0.npz"), **host_arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)             # atomic commit
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.available_steps())
+        for s in steps[: -self.keep] if len(steps) > self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"), ignore_errors=True)
+        # remove aborted partials
+        for name in os.listdir(self.directory):
+            if name.startswith("_tmp_step_"):
+                shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def available_steps(self):
+        steps = []
+        if not os.path.isdir(self.directory):
+            return steps
+        for name in os.listdir(self.directory):
+            if name.startswith("step_"):
+                manifest = os.path.join(self.directory, name, "manifest.json")
+                if os.path.exists(manifest):   # committed only
+                    steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: int | None = None, shardings: Any = None) -> Tuple[int, Any]:
+        """Load ``step`` (default latest) into the structure of ``template``.
+
+        ``shardings``: optional pytree of NamedShardings for the *current* mesh
+        -- elastic restore re-places each array accordingly.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step}")
+        with np.load(os.path.join(path, "shard_0.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        tree = _unflatten_like(template, arrays)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings
+            )
+        return step, tree

@@ -1,0 +1,2 @@
+from repro.configs.base import SHAPES, SHAPES_BY_NAME, ModelConfig, MoEConfig, ShapeConfig  # noqa: F401
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config  # noqa: F401

@@ -1,0 +1,34 @@
+"""paper-bayes-fusion: the paper's own workload as a selectable config.
+
+Large-scale RGB+thermal Bayesian fusion over per-pixel class-probability maps
+(the Movie-S1 simulation): M modalities x K classes x HxW pixels per frame,
+through the stochastic (SNE + AND + popcount) or analytic (eq 5) path.
+This is not an LM; it has its own input_specs / step functions in
+repro.launch.dryrun and its own roofline entry.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BayesFusionConfig:
+    name: str = "paper-bayes-fusion"
+    family: str = "bayes"
+    modalities: int = 2
+    classes: int = 16
+    height: int = 1080
+    width: int = 1920
+    n_bits: int = 128           # stochastic-number length (paper: 100, padded to
+                                # whole uint32 words for the packed TPU path)
+    frames_per_batch: int = 8
+
+
+def full_config() -> BayesFusionConfig:
+    return BayesFusionConfig()
+
+
+def smoke_config() -> BayesFusionConfig:
+    return BayesFusionConfig(
+        name="paper-bayes-smoke", height=32, width=32, classes=4, n_bits=64,
+        frames_per_batch=2,
+    )

@@ -1,0 +1,98 @@
+"""Packed stochastic-number bitstream operations.
+
+The paper streams one bit per 4 us over a wire; on TPU we pack 32 stream bits into
+each uint32 lane word so the VPU processes thousands of stream-bits per cycle
+(DESIGN.md SS2, "bit-plane packing").  A stochastic number of length ``n_bits`` is
+stored as a uint32 array whose trailing axis has ``n_words = ceil(n_bits / 32)``
+entries, LSB-first within each word.  Pad bits (beyond ``n_bits``) are always zero,
+which keeps ``popcount`` exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+WORD = 32
+_FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def n_words(n_bits: int) -> int:
+    """Number of uint32 words needed to hold ``n_bits`` stream bits."""
+    return -(-n_bits // WORD)
+
+
+def pad_mask(n_bits: int) -> jnp.ndarray:
+    """(n_words,) uint32 mask with ones on valid bit positions, zeros on padding."""
+    nw = n_words(n_bits)
+    bit_index = jnp.arange(nw * WORD, dtype=jnp.uint32).reshape(nw, WORD)
+    valid = bit_index < jnp.uint32(n_bits)
+    return pack_bits(valid)[..., 0]
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a (..., n) bool/int array into (..., ceil(n/32)) uint32, LSB-first."""
+    n = bits.shape[-1]
+    nw = n_words(n)
+    pad = nw * WORD - n
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), dtype=bits.dtype)], axis=-1
+        )
+    b = bits.reshape(bits.shape[:-1] + (nw, WORD)).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Unpack (..., n_words) uint32 into (..., n_bits) uint8 in {0, 1}."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD,))
+    return flat[..., :n_bits].astype(jnp.uint8)
+
+
+def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount per uint32 word (returns uint32 of same shape)."""
+    x = words.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def popcount(words: jnp.ndarray) -> jnp.ndarray:
+    """Total number of set bits along the trailing word axis -> (...,) int32."""
+    return jnp.sum(popcount_words(words).astype(jnp.int32), axis=-1)
+
+
+def decode(words: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Decode a packed stochastic number to its probability estimate in [0, 1]."""
+    return popcount(words).astype(jnp.float32) / jnp.float32(n_bits)
+
+
+# --- bitwise gates (correlation semantics live in how streams were encoded) -------
+
+def band(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a & b
+
+
+def bor(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a | b
+
+
+def bxor(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a ^ b
+
+
+def bnot(a: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Bitwise NOT restricted to the valid bit positions (padding stays zero)."""
+    return (a ^ _FULL) & pad_mask(n_bits)
+
+
+def bmux(select: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Per-bit 2:1 MUX: out_t = select_t ? b_t : a_t.
+
+    With select uncorrelated from the inputs this is the paper's weighted adder:
+    ``P(out) = (1 - P(s)) P(a) + P(s) P(b)`` (Table S1, Fig S6a).
+    """
+    return (select & b) | (~select & a)

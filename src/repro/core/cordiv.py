@@ -1,0 +1,73 @@
+"""CORDIV -- correlated stochastic divider (Chen & Hayes 2016; paper Figs S7/S9/S10).
+
+The circuit: ``q_t = d_t ? n_t : DFF`` where the D-flip-flop holds the last quotient
+bit emitted while the divisor was high.  When the numerator stream is a bitwise
+subset of the denominator stream (the correlation the paper engineers by sharing
+SNEs), E[q] -> P(n) / P(d).
+
+Two implementations:
+
+* :func:`cordiv_scan`  -- exact bit-serial circuit semantics via ``lax.scan`` (the
+  flip-flop is the scan carry).  This is the faithful reproduction.
+* :func:`cordiv_ratio` -- the TPU production path: the closed-form fixed point
+  ``popcount(n & d) / popcount(d)``.  For n subset-of d this equals the quantity the
+  serial circuit converges to, without the sequential dependency (DESIGN.md SS2).
+
+Tests assert the two agree within the O(1/sqrt(n_bits)) stochastic tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+
+
+def cordiv_scan(numer: jnp.ndarray, denom: jnp.ndarray, n_bits: int):
+    """Bit-serial CORDIV over packed streams.
+
+    Returns (quotient_stream_packed, estimate).  Leading axes broadcast.
+    """
+    n_bits_axis = -1
+    nb = bitops.unpack_bits(numer, n_bits)           # (..., n_bits) uint8
+    db = bitops.unpack_bits(denom, n_bits)
+    # scan over the bit axis; carry = D-flip-flop state per leading element.
+    nbt = jnp.moveaxis(nb, n_bits_axis, 0)
+    dbt = jnp.moveaxis(db, n_bits_axis, 0)
+    init = jnp.zeros(nbt.shape[1:], jnp.uint8)
+
+    def step(dff, nd):
+        n_t, d_t = nd
+        q_t = jnp.where(d_t == 1, n_t, dff)
+        dff_next = jnp.where(d_t == 1, n_t, dff)
+        return dff_next, q_t
+
+    _, q = jax.lax.scan(step, init, (nbt, dbt))
+    qbits = jnp.moveaxis(q, 0, n_bits_axis)
+    qpacked = bitops.pack_bits(qbits)
+    return qpacked, bitops.decode(qpacked, n_bits)
+
+
+def cordiv_ratio(numer: jnp.ndarray, denom: jnp.ndarray) -> jnp.ndarray:
+    """Closed-form CORDIV fixed point: popcount(n & d) / popcount(d), safe at 0/0."""
+    num = bitops.popcount(numer & denom).astype(jnp.float32)
+    den = bitops.popcount(denom).astype(jnp.float32)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1.0), 0.0)
+
+
+def make_superset(key: jax.Array, numer: jnp.ndarray, p_n, p_d, n_bits: int):
+    """Superset completion: build a stream d with P(d)=p_d and numer subset-of d.
+
+    d = n OR g with g an independent stream of probability
+    (p_d - p_n) / (1 - p_n); used when the denominator is known only marginally
+    (e.g. P(B) given directly rather than through the MUX) so that CORDIV's
+    correlation requirement still holds.
+    """
+    from repro.core import sne
+
+    p_n = jnp.asarray(p_n, jnp.float32)
+    p_d = jnp.asarray(p_d, jnp.float32)
+    p_g = jnp.clip((p_d - p_n) / jnp.maximum(1.0 - p_n, 1e-6), 0.0, 1.0)
+    g = sne.encode_uncorrelated(key, p_g, n_bits)
+    return numer | g

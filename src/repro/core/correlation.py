@@ -1,0 +1,57 @@
+"""Stochastic-number correlation metrics (paper Methods: Pearson rho and SCC).
+
+Both are computed from the 2x2 contingency counts of paired bits:
+a = #(1,1), b = #(1,0), c = #(0,1), d = #(0,0).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitops
+
+
+def pair_counts(x: jnp.ndarray, y: jnp.ndarray, n_bits: int):
+    """Contingency counts (a, b, c, d) of two packed streams."""
+    mask = bitops.pad_mask(n_bits)
+    nx = (x ^ jnp.uint32(0xFFFFFFFF)) & mask
+    ny = (y ^ jnp.uint32(0xFFFFFFFF)) & mask
+    a = bitops.popcount(x & y)
+    b = bitops.popcount(x & ny)
+    c = bitops.popcount(nx & y)
+    d = bitops.popcount(nx & ny)
+    return a, b, c, d
+
+
+def pearson(x: jnp.ndarray, y: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Pearson correlation rho(S_x, S_y) from the paper's Methods formula."""
+    a, b, c, d = (v.astype(jnp.float32) for v in pair_counts(x, y, n_bits))
+    num = a * d - b * c
+    den = jnp.sqrt((a + b) * (a + c) * (b + d) * (c + d))
+    return jnp.where(den > 0, num / den, 0.0).astype(jnp.float32)
+
+
+def scc(x: jnp.ndarray, y: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """SC correlation (Alaghi & Hayes 2013) from the paper's Methods formula."""
+    a, b, c, d = (v.astype(jnp.float32) for v in pair_counts(x, y, n_bits))
+    n = a + b + c + d
+    ad_bc = a * d - b * c
+    den_pos = n * jnp.minimum(a + b, a + c) - (a + b) * (a + c)
+    den_neg = (a + b) * (a + c) - n * jnp.maximum(a - d, 0.0)
+    out = jnp.where(
+        ad_bc >= 0,
+        jnp.where(den_pos != 0, ad_bc / den_pos, 0.0),
+        jnp.where(den_neg != 0, ad_bc / den_neg, 0.0),
+    )
+    return out.astype(jnp.float32)
+
+
+def correlation_matrix(streams, n_bits: int, metric: str = "pearson") -> jnp.ndarray:
+    """Pairwise correlation matrix over a dict/list of packed streams."""
+    fn = pearson if metric == "pearson" else scc
+    items = list(streams.values()) if isinstance(streams, dict) else list(streams)
+    k = len(items)
+    rows = []
+    for i in range(k):
+        rows.append(jnp.stack([fn(items[i], items[j], n_bits) for j in range(k)]))
+    return jnp.stack(rows)

@@ -1,0 +1,149 @@
+"""Volatile memristor device model calibrated to the paper's measurements.
+
+Fig 1 / S2 / S4 of the paper characterise solution-processed hBN filamentary
+memristors:
+
+* cycle-to-cycle threshold voltage  V_th  ~ N(2.08 V, 0.28 V)
+* cycle-to-cycle hold voltage       V_hold~ N(0.98 V, 0.30 V)
+* per-cycle V_th trajectory follows an Ornstein-Uhlenbeck (mean-reverting) process
+* device-to-device coefficient of variation in V_th ~ 8 %
+* switching time ~50 ns, relaxation ~1,100 ns (< 4 us per encoded bit),
+  switching energy ~0.16 nJ, endurance > 1e6 cycles.
+
+This module is the *simulator* side of the reproduction: it generates switching
+trajectories statistically indistinguishable (by the paper's own OU fit) from the
+measured devices, and it carries the timing/energy constants used by
+:mod:`repro.core.latency`.  The production encoders in :mod:`repro.core.sne` may use
+either this device model or a raw counter-based PRNG (DESIGN.md SS2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MemristorParams:
+    """Calibrated constants from the paper (all SI units)."""
+
+    vth_mu: float = 2.08          # V   (Fig 1c)
+    vth_sigma: float = 0.28       # V
+    vhold_mu: float = 0.98        # V
+    vhold_sigma: float = 0.30     # V
+    d2d_cv: float = 0.08          # device-to-device CV of V_th
+    # OU process dV_t = theta * (mu - V_t) dt + sigma_w dW_t (dt = 1 cycle).
+    ou_theta: float = 0.35        # mean-reversion magnitude (Fig S4 fit regime)
+    t_switch: float = 50e-9       # s  (Fig S2)
+    t_relax: float = 1.1e-6       # s
+    t_bit: float = 4e-6           # s  -- paper: "<4 us in total per bit"
+    e_switch: float = 0.16e-9     # J  (Fig S2)
+    endurance_cycles: float = 1e6
+    switching_ratio: float = 1e5  # HRS/LRS resistance ratio (Fig 1b)
+    # Empirical SNE transfer curves (Fig 2b / 2c sigmoid fits).
+    k_unc: float = 3.56
+    v0_unc: float = 2.24
+    k_corr: float = 11.5
+    v0_corr: float = 0.57
+
+    @property
+    def ou_sigma_w(self) -> float:
+        """Wiener increment scale chosen so the OU stationary std equals vth_sigma.
+
+        For the AR(1) discretisation x' = x + theta (mu - x) + s_w eps, stationary
+        variance is s_w^2 / (1 - (1 - theta)^2).
+        """
+        return self.vth_sigma * float(np.sqrt(1.0 - (1.0 - self.ou_theta) ** 2))
+
+
+DEFAULT_PARAMS = MemristorParams()
+
+
+def sample_ou_path(
+    key: jax.Array,
+    n: int,
+    params: MemristorParams = DEFAULT_PARAMS,
+    mu: float | jax.Array | None = None,
+    x0: float | jax.Array | None = None,
+) -> jnp.ndarray:
+    """Sample an OU trajectory of per-cycle V_th values, shape (n,).
+
+    ``mu`` may be a scalar or batched array of per-device means (device-to-device
+    spread); output broadcasts accordingly to shape ``(n,) + shape(mu)``.
+    """
+    mu_ = jnp.asarray(params.vth_mu if mu is None else mu, dtype=jnp.float32)
+    x0_ = mu_ if x0 is None else jnp.asarray(x0, dtype=jnp.float32)
+    theta = jnp.float32(params.ou_theta)
+    s_w = jnp.float32(params.ou_sigma_w)
+    eps = jax.random.normal(key, (n,) + mu_.shape, dtype=jnp.float32)
+
+    def step(x, e):
+        x_next = x + theta * (mu_ - x) + s_w * e
+        return x_next, x_next
+
+    _, path = jax.lax.scan(step, x0_, eps)
+    return path
+
+
+def sample_devices(
+    key: jax.Array, n_devices: int, params: MemristorParams = DEFAULT_PARAMS
+) -> jnp.ndarray:
+    """Per-device mean V_th values (device-to-device variation, Fig 1d)."""
+    d2d_sigma = params.vth_mu * params.d2d_cv
+    return params.vth_mu + d2d_sigma * jax.random.normal(
+        key, (n_devices,), dtype=jnp.float32
+    )
+
+
+def fit_ou(path: np.ndarray) -> Tuple[float, float, float]:
+    """Least-squares AR(1) fit of an OU process: returns (theta, mu, sigma_w).
+
+    Mirrors the paper's Fig S4 stability analysis: x_{t+1} - x_t regressed on x_t.
+    """
+    x = np.asarray(path, dtype=np.float64)
+    xt, xn = x[:-1], x[1:]
+    # xn = a + b * xt + resid ; theta = 1 - b, mu = a / theta.
+    b, a = np.polyfit(xt, xn, 1)
+    theta = 1.0 - b
+    mu = a / theta if abs(theta) > 1e-9 else float(np.mean(x))
+    resid = xn - (a + b * xt)
+    sigma_w = float(np.std(resid))
+    return float(theta), float(mu), sigma_w
+
+
+def switching_event(
+    key: jax.Array,
+    v_in: jax.Array,
+    n_cycles: int,
+    params: MemristorParams = DEFAULT_PARAMS,
+    mu: float | jax.Array | None = None,
+) -> jnp.ndarray:
+    """Simulate ``n_cycles`` pulsed cycles: did the device switch on each pulse?
+
+    A pulse of amplitude ``v_in`` switches the memristor iff ``v_in > V_th,t`` where
+    ``V_th,t`` follows the OU trajectory.  The volatile self-reset (bias < V_hold
+    between pulses) means no reset circuitry is modelled -- exactly the paper's
+    "lightweight" argument.  Returns uint8 (n_cycles,) + broadcastshape.
+    """
+    vth = sample_ou_path(key, n_cycles, params, mu=mu)
+    return (jnp.asarray(v_in, dtype=jnp.float32) > vth).astype(jnp.uint8)
+
+
+def endurance_trace(
+    key: jax.Array, cycles: int, params: MemristorParams = DEFAULT_PARAMS
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """HRS/LRS resistance readings over an endurance test (Fig 1e).
+
+    Log-normal jitter around stable means; the test asserts both states stay
+    separated by the paper's ~1e5 switching ratio throughout.
+    """
+    k1, k2 = jax.random.split(key)
+    lrs = 1e4 * jnp.exp(0.05 * jax.random.normal(k1, (cycles,)))   # ~10 kOhm on-state
+    hrs = lrs.mean() * params.switching_ratio * jnp.exp(
+        0.08 * jax.random.normal(k2, (cycles,))
+    )
+    return hrs, lrs

@@ -1,0 +1,129 @@
+"""Hardware Bayesian fusion operator (paper Fig 4 / S9 / S10, eqs (2)-(5)).
+
+Fuses M conditionally-independent modal posteriors over K classes:
+
+    p(y | x_1..x_M)  proportional-to  prod_i p(y | x_i) / p(y)^(M-1)      (eq 5)
+
+Circuit: one probabilistic AND chain per class (the numerator products), division
+by the prior via CORDIV, and the Fig-S10 normalization module so the class scores
+sum to one.  The normalization denominator is realised as a MUX tree (weighted
+adder) over the class-numerator streams -- all selects fresh/uncorrelated -- and
+the final ratio by CORDIV; both the serial-circuit and the closed-form popcount
+paths are provided.
+
+``fuse_analytic`` is the float oracle (also the eq-(5) math used at video scale in
+Movie S1 and by the `fusion_map` Pallas kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, cordiv, logic, sne
+
+
+def fuse_analytic(p_modal: jnp.ndarray, prior: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq (5) with normalization.
+
+    p_modal: (..., M, K) single-modal posteriors over K classes.
+    prior:   (K,) class prior; uniform if None (the paper's circuit assumption).
+    Returns (..., K) normalized fused posterior.
+    """
+    p_modal = jnp.asarray(p_modal, jnp.float32)
+    m = p_modal.shape[-2]
+    k = p_modal.shape[-1]
+    if prior is None:
+        prior = jnp.full((k,), 1.0 / k, jnp.float32)
+    prior = jnp.asarray(prior, jnp.float32)
+    log_q = jnp.sum(jnp.log(jnp.clip(p_modal, 1e-9, 1.0)), axis=-2) - (
+        m - 1
+    ) * jnp.log(jnp.clip(prior, 1e-9, 1.0))
+    q = jnp.exp(log_q - jnp.max(log_q, axis=-1, keepdims=True))
+    return q / jnp.sum(q, axis=-1, keepdims=True)
+
+
+def fuse_unnormalized_analytic(p_modal, prior=None) -> jnp.ndarray:
+    """Eq (5) numerator  prod_i p_i / prior^(M-1)  (may exceed 1 -- Fig S10 rationale)."""
+    p_modal = jnp.asarray(p_modal, jnp.float32)
+    m, k = p_modal.shape[-2], p_modal.shape[-1]
+    if prior is None:
+        prior = jnp.full((k,), 1.0 / k, jnp.float32)
+    return jnp.prod(p_modal, axis=-2) / jnp.asarray(prior, jnp.float32) ** (m - 1)
+
+
+@dataclasses.dataclass
+class FusionTrace:
+    streams: Dict[str, jnp.ndarray]
+    n_bits: int
+    fused_scan: jnp.ndarray      # (..., K) serial-circuit normalized posterior
+    fused_ratio: jnp.ndarray     # (..., K) closed-form normalized posterior
+    fused_analytic: jnp.ndarray  # (..., K) float oracle
+
+
+def bayes_fusion(
+    key: jax.Array,
+    p_modal: jnp.ndarray,
+    n_bits: int = 100,
+    prior: jnp.ndarray | None = None,
+) -> FusionTrace:
+    """Run the hardware Bayesian fusion operator.
+
+    p_modal: (..., M, K).  The M modal streams per class come from parallel SNEs
+    (conditional independence, eq (3)); the normalization MUX tree uses fresh
+    selects (Fig S6 requirement).
+    """
+    p_modal = jnp.asarray(p_modal, jnp.float32)
+    m, k = p_modal.shape[-2], p_modal.shape[-1]
+    k_enc, k_tree = jax.random.split(key)
+    # (..., M, K, n_words) independent streams -- one SNE per (modality, class).
+    s_modal = sne.encode_uncorrelated(k_enc, p_modal, n_bits)
+    # Numerator per class: AND across modalities (one-step multiplication).
+    numer = s_modal[..., 0, :, :]
+    for i in range(1, m):
+        numer = bitops.band(numer, s_modal[..., i, :, :])   # (..., K, n_words)
+    # Normalization denominator: MUX tree over class numerators -> (1/Kp) sum_j q_j.
+    denom, _ = logic.mux_tree(k_tree, numer, n_bits)        # (..., n_words)
+
+    # Closed-form path: q_c / sum_j q_j  (the 1/Kp scale cancels in the ratio).
+    cnt_num = bitops.popcount(numer).astype(jnp.float32)    # (..., K)
+    cnt_den = jnp.sum(cnt_num, axis=-1, keepdims=True)
+    fused_ratio = jnp.where(cnt_den > 0, cnt_num / jnp.maximum(cnt_den, 1.0), 1.0 / k)
+
+    # Serial-circuit path: CORDIV(numer_c, tree) with superset completion per class
+    # (the tree output is not a bitwise superset; complete it, as Fig S10's
+    # normalization module does with its feedback register).
+    denom_sup = numer | denom[..., None, :]
+    _, q_scan = cordiv.cordiv_scan(numer, denom_sup, n_bits)   # (..., K)
+    z = jnp.sum(q_scan, axis=-1, keepdims=True)
+    fused_scan = jnp.where(z > 0, q_scan / jnp.maximum(z, 1e-9), 1.0 / k)
+
+    # Prior division (non-uniform priors): fold into the analytic oracle; the
+    # circuit assumes uniform p(y) "for the convenience of circuit designs"
+    # (paper Methods) -- we do the same for the stream paths.
+    return FusionTrace(
+        streams={"numer": numer, "denom": denom},
+        n_bits=n_bits,
+        fused_scan=fused_scan,
+        fused_ratio=fused_ratio,
+        fused_analytic=fuse_analytic(p_modal, prior),
+    )
+
+
+def detection_fusion(
+    key: jax.Array,
+    p_det_modal: jnp.ndarray,
+    n_bits: int = 100,
+) -> jnp.ndarray:
+    """Binary obstacle-detection fusion (the Fig 4 use case).
+
+    p_det_modal: (..., M) per-modality detection confidences for one candidate box;
+    classes are {obstacle, background}; uniform prior.  Returns fused P(obstacle).
+    """
+    p = jnp.asarray(p_det_modal, jnp.float32)
+    p2 = jnp.stack([p, 1.0 - p], axis=-1)           # (..., M, 2)
+    tr = bayes_fusion(key, p2, n_bits=n_bits)
+    return tr.fused_ratio[..., 0]

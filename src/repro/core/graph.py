@@ -1,0 +1,94 @@
+"""Bayesian-network dependency structures from Fig S8.
+
+* one-parent-one-child  (A -> B)          : 2x1 MUX        -- `repro.core.inference`
+* two-parent-one-child  (A1 -> B <- A2)   : 4x1 MUX
+* one-parent-two-child  (B1 <- A -> B2)   : two 2x1 MUXes
+
+All operators keep the numerator a bitwise subset of the denominator by sharing
+the parent/likelihood SNE streams, as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, cordiv, sne
+
+
+def analytic_two_parent(p_a1, p_a2, cpt) -> jnp.ndarray:
+    """P(A1=1 | B=1) with cpt[i, j] = P(B=1 | A1=i, A2=j)."""
+    p_a1 = jnp.asarray(p_a1, jnp.float32)
+    p_a2 = jnp.asarray(p_a2, jnp.float32)
+    cpt = jnp.asarray(cpt, jnp.float32)
+    w = jnp.stack(
+        [
+            (1 - p_a1) * (1 - p_a2) * cpt[0, 0],
+            (1 - p_a1) * p_a2 * cpt[0, 1],
+            p_a1 * (1 - p_a2) * cpt[1, 0],
+            p_a1 * p_a2 * cpt[1, 1],
+        ]
+    )
+    p_b = jnp.sum(w, axis=0)
+    num = w[2] + w[3]
+    return jnp.where(p_b > 0, num / jnp.maximum(p_b, 1e-9), 0.0)
+
+
+def two_parent_one_child(
+    key: jax.Array, p_a1, p_a2, cpt, n_bits: int = 100
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Posterior P(A1|B=1) via a 4x1 MUX (Fig S8b).
+
+    Returns (posterior_scan, posterior_ratio, analytic).
+    """
+    cpt = jnp.asarray(cpt, jnp.float32)
+    k1, k2, kc = jax.random.split(key, 3)
+    s_a1 = sne.encode_uncorrelated(k1, jnp.asarray(p_a1, jnp.float32), n_bits)
+    s_a2 = sne.encode_uncorrelated(k2, jnp.asarray(p_a2, jnp.float32), n_bits)
+    kcs = jax.random.split(kc, 4)
+    s_cpt = [
+        sne.encode_uncorrelated(kcs[2 * i + j], cpt[i, j], n_bits)
+        for i in range(2)
+        for j in range(2)
+    ]  # order: 00, 01, 10, 11
+    # 4x1 MUX: selects are (A1, A2).
+    lo = bitops.bmux(s_a2, s_cpt[0], s_cpt[1])   # A1 = 0 branch
+    hi = bitops.bmux(s_a2, s_cpt[2], s_cpt[3])   # A1 = 1 branch
+    denom = bitops.bmux(s_a1, lo, hi)            # = P(B)
+    numer = bitops.band(s_a1, hi)                # = P(A1=1, B)
+    _, post_scan = cordiv.cordiv_scan(numer, denom, n_bits)
+    post_ratio = cordiv.cordiv_ratio(numer, denom)
+    return post_scan, post_ratio, analytic_two_parent(p_a1, p_a2, cpt)
+
+
+def analytic_one_parent_two_child(p_a, p_b1, p_b2) -> jnp.ndarray:
+    """P(A=1 | B1=1, B2=1); p_bi = (P(Bi|A), P(Bi|notA))."""
+    p_a = jnp.asarray(p_a, jnp.float32)
+    num = p_a * p_b1[0] * p_b2[0]
+    den = num + (1 - p_a) * p_b1[1] * p_b2[1]
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-9), 0.0)
+
+
+def one_parent_two_child(
+    key: jax.Array, p_a, p_b1, p_b2, n_bits: int = 100
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Posterior P(A | B1, B2) via two 2x1 MUXes (Fig S8c).
+
+    ``p_b1``/``p_b2`` are pairs (P(Bi|A), P(Bi|notA)).
+    Returns (posterior_scan, posterior_ratio, analytic).
+    """
+    ka, k1a, k1n, k2a, k2n = jax.random.split(key, 5)
+    s_a = sne.encode_uncorrelated(ka, jnp.asarray(p_a, jnp.float32), n_bits)
+    s_b1a = sne.encode_uncorrelated(k1a, jnp.asarray(p_b1[0], jnp.float32), n_bits)
+    s_b1n = sne.encode_uncorrelated(k1n, jnp.asarray(p_b1[1], jnp.float32), n_bits)
+    s_b2a = sne.encode_uncorrelated(k2a, jnp.asarray(p_b2[0], jnp.float32), n_bits)
+    s_b2n = sne.encode_uncorrelated(k2n, jnp.asarray(p_b2[1], jnp.float32), n_bits)
+    numer = s_a & s_b1a & s_b2a
+    denom = bitops.band(
+        bitops.bmux(s_a, s_b1n, s_b1a), bitops.bmux(s_a, s_b2n, s_b2a)
+    )
+    _, post_scan = cordiv.cordiv_scan(numer, denom, n_bits)
+    post_ratio = cordiv.cordiv_ratio(numer, denom)
+    return post_scan, post_ratio, analytic_one_parent_two_child(p_a, p_b1, p_b2)

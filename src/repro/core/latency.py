@@ -1,0 +1,79 @@
+"""Decision latency / energy model (the paper's timeliness claim).
+
+The paper: with 100-bit stochastic numbers and < 4 us total switching per bit, the
+Bayesian inference and fusion operators decide in < 0.4 ms per frame (>= 2,500 fps),
+outperforming human reaction and ADAS pipelines.  Comparator/gate delays are
+neglected (memristor switching is the bottleneck -- paper Fig 3 discussion).
+
+This module reproduces those numbers from the device constants and extends the
+model to the TPU mapping (bit-plane packed streams): there the bottleneck becomes
+VPU bitwise throughput, and latency per decision is sub-microsecond while the
+memristor path is reported alongside for the faithful comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.device import DEFAULT_PARAMS, MemristorParams
+
+# Reference points quoted by the paper.
+HUMAN_REACTION_S = (0.7, 1.5)   # paper cites 0.7-1.5 (ref 28, driver brake times;
+                                # the paper text says "ms", the cited literature
+                                # measures seconds -- we keep the comparison either
+                                # way since the operator is faster than both)
+ADAS_FPS = (30.0, 45.0)         # advanced driver-assistance systems (ref 29)
+CAMERA_FPS = (10.0, 30.0)       # sensor sampling (ref 32)
+EDGE_NET_FPS = 300.0            # pre-trained edge detector (ref 33)
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyReport:
+    n_bits: int
+    frame_latency_s: float
+    fps: float
+    energy_per_decision_j: float
+    n_sne: int
+
+    def meets_paper_claim(self) -> bool:
+        """Paper claim: < 0.4 ms per frame, i.e. >= 2,500 fps at 100 bits."""
+        return self.frame_latency_s < 0.4e-3 and self.fps >= 2500.0
+
+
+def memristor_latency(
+    n_bits: int = 100,
+    n_sne: int = 5,
+    mean_p: float = 0.5,
+    params: MemristorParams = DEFAULT_PARAMS,
+) -> LatencyReport:
+    """Latency/energy of one operator decision on the memristor substrate.
+
+    The SNEs stream bits in parallel (one memristor each); the serial dimension is
+    the bit index, so frame latency = n_bits * t_bit.  Energy counts one switching
+    event per emitted 1-bit per SNE (expected fraction ``mean_p``).
+    """
+    latency = n_bits * params.t_bit
+    energy = n_sne * n_bits * mean_p * params.e_switch
+    return LatencyReport(
+        n_bits=n_bits,
+        frame_latency_s=latency,
+        fps=1.0 / latency,
+        energy_per_decision_j=energy,
+        n_sne=n_sne,
+    )
+
+
+def tpu_throughput_model(
+    n_bits: int = 100,
+    n_gate_ops: int = 8,
+    vpu_bitops_per_s: float = 197e12 / 2 / 16,  # conservative: treat VPU lane ops
+    # as ~1/16 of bf16 MAC throughput in op/s terms; one uint32 op moves 32 bits
+) -> float:
+    """Decisions/second of the packed TPU mapping (order-of-magnitude model).
+
+    Each decision needs ceil(n_bits/32) words x n_gate_ops bitwise ops; popcount
+    adds ~5 ops/word.  Memory traffic is negligible (streams stay in VMEM).
+    """
+    words = -(-n_bits // 32)
+    ops = words * (n_gate_ops + 5)
+    return vpu_bitops_per_s / ops

@@ -1,0 +1,145 @@
+"""Memristor-enabled probabilistic logics (Fig 2d/2e, Table S1).
+
+Stochastic numbers fed through ordinary Boolean gates compute probability
+arithmetic; *which* arithmetic depends on the correlation between the input
+streams, which the SNEs engineer (shared vs parallel entropy).  This module gives
+
+* the analytic (Table S1) expectations, used as oracles everywhere, and
+* gate-level operators that encode inputs in the requested correlation mode and
+  apply the packed bitwise gate.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, sne
+
+
+class Corr(enum.Enum):
+    UNCORRELATED = "uncorrelated"
+    POSITIVE = "positive"
+    NEGATIVE = "negative"
+
+
+# --- Table S1 analytic relations --------------------------------------------------
+
+def expected_and(pa, pb, mode: Corr) -> jnp.ndarray:
+    pa, pb = jnp.asarray(pa, jnp.float32), jnp.asarray(pb, jnp.float32)
+    if mode is Corr.UNCORRELATED:
+        return pa * pb
+    if mode is Corr.POSITIVE:
+        return jnp.minimum(pa, pb)
+    return jnp.maximum(pa + pb - 1.0, 0.0)
+
+
+def expected_or(pa, pb, mode: Corr) -> jnp.ndarray:
+    pa, pb = jnp.asarray(pa, jnp.float32), jnp.asarray(pb, jnp.float32)
+    if mode is Corr.UNCORRELATED:
+        return pa + pb - pa * pb
+    if mode is Corr.POSITIVE:
+        return jnp.maximum(pa, pb)
+    return jnp.minimum(1.0, pa + pb)
+
+
+def expected_xor(pa, pb, mode: Corr) -> jnp.ndarray:
+    pa, pb = jnp.asarray(pa, jnp.float32), jnp.asarray(pb, jnp.float32)
+    if mode is Corr.UNCORRELATED:
+        return pa + pb - 2.0 * pa * pb
+    if mode is Corr.POSITIVE:
+        return jnp.abs(pa - pb)
+    s = pa + pb
+    return jnp.where(s <= 1.0, s, 2.0 - s)
+
+
+def expected_mux(ps, pa, pb) -> jnp.ndarray:
+    """Weighted addition; valid only when the select is uncorrelated with inputs."""
+    ps = jnp.asarray(ps, jnp.float32)
+    return (1.0 - ps) * jnp.asarray(pa, jnp.float32) + ps * jnp.asarray(pb, jnp.float32)
+
+
+# --- encoding helpers per correlation mode ----------------------------------------
+
+def encode_pair(
+    key: jax.Array, pa, pb, n_bits: int, mode: Corr
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Encode two streams with the requested mutual correlation."""
+    pa = jnp.asarray(pa, jnp.float32)
+    pb = jnp.asarray(pb, jnp.float32)
+    if mode is Corr.UNCORRELATED:
+        ka, kb = jax.random.split(key)
+        return (
+            sne.encode_uncorrelated(ka, pa, n_bits),
+            sne.encode_uncorrelated(kb, pb, n_bits),
+        )
+    stacked = jnp.stack(jnp.broadcast_arrays(pa, pb), axis=-1)
+    if mode is Corr.POSITIVE:
+        words = sne.encode_correlated(key, stacked, n_bits)
+    else:
+        neg = jnp.zeros(stacked.shape, bool).at[..., 1].set(True)
+        words = sne.encode_correlated(key, stacked, n_bits, negate=neg)
+    return words[..., 0, :], words[..., 1, :]
+
+
+# --- gate-level operators -----------------------------------------------------------
+
+def prob_and(key, pa, pb, n_bits: int, mode: Corr = Corr.UNCORRELATED):
+    """Probabilistic AND: returns (stream_c, estimate, (stream_a, stream_b))."""
+    a, b = encode_pair(key, pa, pb, n_bits, mode)
+    c = bitops.band(a, b)
+    return c, bitops.decode(c, n_bits), (a, b)
+
+
+def prob_or(key, pa, pb, n_bits: int, mode: Corr = Corr.UNCORRELATED):
+    a, b = encode_pair(key, pa, pb, n_bits, mode)
+    c = bitops.bor(a, b)
+    return c, bitops.decode(c, n_bits), (a, b)
+
+
+def prob_xor(key, pa, pb, n_bits: int, mode: Corr = Corr.UNCORRELATED):
+    a, b = encode_pair(key, pa, pb, n_bits, mode)
+    c = bitops.bxor(a, b)
+    return c, bitops.decode(c, n_bits), (a, b)
+
+
+def prob_mux(key, ps, pa, pb, n_bits: int, mode_inputs: Corr = Corr.UNCORRELATED):
+    """Probabilistic MUX (weighted adder).
+
+    The select stream is always drawn from an independent SNE: Fig S6 shows the
+    operation is corrupted if the select correlates with the inputs.  The two data
+    inputs may themselves be correlated or not (``mode_inputs``) -- the MUX output
+    probability is unaffected either way.
+    """
+    ks, kab = jax.random.split(key)
+    s = sne.encode_uncorrelated(ks, ps, n_bits)
+    a, b = encode_pair(kab, pa, pb, n_bits, mode_inputs)
+    c = bitops.bmux(s, a, b)
+    return c, bitops.decode(c, n_bits), (s, a, b)
+
+
+def mux_tree(key, streams: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Balanced MUX tree over ``streams`` (..., K, n_words) with fresh uniform selects.
+
+    Output probability = mean of the K input probabilities (i.e. (1/K) * sum) for
+    K a power of two; non-powers of two are padded with zero streams, giving
+    (1/K_pad) * sum -- callers must account for the scale (they do, in fusion).
+    Returns (stream, K_pad).
+    """
+    k = streams.shape[-2]
+    k_pad = 1 << (k - 1).bit_length()
+    if k_pad != k:
+        pad = jnp.zeros(streams.shape[:-2] + (k_pad - k, streams.shape[-1]), streams.dtype)
+        streams = jnp.concatenate([streams, pad], axis=-2)
+    level = streams
+    while level.shape[-2] > 1:
+        key, sub = jax.random.split(key)
+        half = level.shape[-2] // 2
+        sel = sne.encode_uncorrelated(
+            sub, jnp.full(level.shape[:-2] + (half,), 0.5, jnp.float32), n_bits
+        )
+        level = bitops.bmux(sel, level[..., 0::2, :], level[..., 1::2, :])
+    return level[..., 0, :], k_pad

@@ -1,0 +1,121 @@
+"""Stochastic number encoders (SNEs) -- Fig 2a / S5 of the paper.
+
+An SNE turns a probability into a Bernoulli bitstream.  In the paper the entropy
+comes from the memristor's stochastic V_th and the probability is programmed by the
+pulse amplitude ``V_in`` (uncorrelated mode, Fig 2b) or the comparator reference
+``V_ref`` (correlated mode, Fig 2c).  Here both modes are reproduced:
+
+* ``encode_uncorrelated`` -- parallel SNEs: independent entropy per stream.
+* ``encode_correlated``   -- one SNE, several comparator references: all streams in
+  the group share the same per-bit entropy word ``u`` and are therefore maximally
+  positively correlated; passing ``negate=True`` for a stream models the NOT gate on
+  the comparator output (Fig S5b), yielding maximal *negative* correlation.
+* ``encode_via_device``   -- drives the encoder from the OU memristor simulator so
+  statistical equivalence with the calibrated device can be asserted in tests.
+
+Streams are returned packed (see :mod:`repro.core.bitops`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.device import DEFAULT_PARAMS, MemristorParams, sample_ou_path
+
+
+# --- the paper's programmed transfer curves (Fig 2b/2c) ---------------------------
+
+def p_from_vin(v_in: jax.Array, params: MemristorParams = DEFAULT_PARAMS) -> jnp.ndarray:
+    """P_uncorrelated(V_in) = sigmoid(k_unc (V_in - v0_unc))  [Fig 2b fit]."""
+    return jax.nn.sigmoid(params.k_unc * (jnp.asarray(v_in, jnp.float32) - params.v0_unc))
+
+
+def vin_from_p(p: jax.Array, params: MemristorParams = DEFAULT_PARAMS) -> jnp.ndarray:
+    """Inverse of :func:`p_from_vin` (programming voltage for a target probability)."""
+    p = jnp.clip(jnp.asarray(p, jnp.float32), 1e-6, 1.0 - 1e-6)
+    return params.v0_unc + jnp.log(p / (1.0 - p)) / params.k_unc
+
+
+def p_from_vref(v_ref: jax.Array, params: MemristorParams = DEFAULT_PARAMS) -> jnp.ndarray:
+    """P_correlated(V_ref) = 1 - sigmoid(k_corr (V_ref - v0_corr))  [Fig 2c fit]."""
+    return 1.0 - jax.nn.sigmoid(
+        params.k_corr * (jnp.asarray(v_ref, jnp.float32) - params.v0_corr)
+    )
+
+
+def vref_from_p(p: jax.Array, params: MemristorParams = DEFAULT_PARAMS) -> jnp.ndarray:
+    """Inverse of :func:`p_from_vref`."""
+    p = jnp.clip(jnp.asarray(p, jnp.float32), 1e-6, 1.0 - 1e-6)
+    return params.v0_corr + jnp.log((1.0 - p) / p) / params.k_corr
+
+
+# --- encoders ---------------------------------------------------------------------
+
+def encode_uncorrelated(key: jax.Array, p: jax.Array, n_bits: int) -> jnp.ndarray:
+    """Encode probabilities ``p`` (any shape) into independent packed streams.
+
+    Output shape: ``p.shape + (n_words,)``.
+    """
+    p = jnp.asarray(p, jnp.float32)
+    u = jax.random.uniform(key, p.shape + (n_bits,), dtype=jnp.float32)
+    bits = u < p[..., None]
+    return bitops.pack_bits(bits)
+
+
+def encode_correlated(
+    key: jax.Array,
+    p: jax.Array,
+    n_bits: int,
+    negate: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Encode ``p`` (shape ``(..., k)``) as ``k`` streams sharing one entropy source.
+
+    All streams in the trailing axis use the same per-bit uniform ``u`` (one SNE,
+    many comparator references), so ``bit_i = u < p_i`` -- maximal positive
+    correlation.  Entries where ``negate`` is truthy use the complementary
+    comparator (NOT gate): ``bit_i = (1 - u) < p_i`` -- maximal negative
+    correlation with the non-negated streams.
+    """
+    p = jnp.asarray(p, jnp.float32)
+    u = jax.random.uniform(key, p.shape[:-1] + (1, n_bits), dtype=jnp.float32)
+    if negate is None:
+        bits = u < p[..., None]
+    else:
+        neg = jnp.asarray(negate, bool)[..., None]
+        uu = jnp.where(neg, 1.0 - u, u)
+        bits = uu < p[..., None]
+    return bitops.pack_bits(bits)
+
+
+def encode_via_device(
+    key: jax.Array,
+    p: jax.Array,
+    n_bits: int,
+    params: MemristorParams = DEFAULT_PARAMS,
+) -> jnp.ndarray:
+    """Encode with entropy drawn from the OU memristor simulator.
+
+    The per-bit switching threshold V_th,t follows the calibrated OU process; the
+    programming voltage for target probability ``p`` is chosen so that
+    P(V_th,t < V_in) = p under the stationary Gaussian.  This is the
+    device-faithful path; tests assert it matches :func:`encode_uncorrelated`
+    statistically.
+    """
+    p = jnp.asarray(p, jnp.float32)
+    flat = p.reshape(-1)
+    keys = jax.random.split(key, flat.shape[0])
+    # Per-stream OU path of V_th; V_in from the stationary Gaussian quantile.
+    from jax.scipy.stats import norm
+
+    v_in = params.vth_mu + params.vth_sigma * norm.ppf(
+        jnp.clip(flat, 1e-6, 1 - 1e-6)
+    )
+
+    def one(k, v):
+        vth = sample_ou_path(k, n_bits, params)
+        return (v > vth).astype(jnp.uint8)
+
+    bits = jax.vmap(one)(keys, v_in)
+    return bitops.pack_bits(bits).reshape(p.shape + (bitops.n_words(n_bits),))

@@ -1,0 +1,2 @@
+from repro.data import detection, pipeline  # noqa: F401
+from repro.data.pipeline import DataConfig, Prefetcher, batch_at_step  # noqa: F401

@@ -1,0 +1,76 @@
+"""Synthetic FLIR-like RGB/thermal detection maps (the Fig 4 / Movie S1 data).
+
+The real FLIR dataset is not available offline; we generate aligned RGB/thermal
+per-pixel obstacle-probability maps with the failure modes the paper describes:
+RGB misses targets at night / harsh lighting, thermal misses targets without
+heat emission.  Ground truth is known, so fusion miss-rate/confidence gains are
+measurable (benchmarks/bench_fig4_fusion.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SceneConfig:
+    height: int = 64
+    width: int = 64
+    n_obstacles: int = 6
+    night_fraction: float = 0.5     # scenes at night (RGB visibility drops)
+    rgb_vis_day: float = 0.95       # P(obstacle clearly visible to RGB), day
+    rgb_vis_night: float = 0.50     # ... at night (harsh lighting, low light)
+    thermal_vis: float = 0.55       # P(clear heat signature) -- cold targets
+    strong: float = 0.85            # detector confidence on a clear target
+    weak: float = 0.52              # "insufficient evidence", NOT a confident
+                                    # rejection -- the regime fusion can rescue
+
+
+def make_scene(key: jax.Array, cfg: SceneConfig):
+    """Returns (gt (H, W) {0,1}, p_rgb (H, W), p_thermal (H, W), night flag).
+
+    Failure modes are independent per obstacle and per modality (the paper's
+    Fig 4 setting): a missed target yields a *weak* confidence around 0.5
+    (insufficient evidence), so conditionally-independent fusion (eq 5) can
+    recover targets that either single modality loses.
+    """
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    h, w = cfg.height, cfg.width
+    yy, xx = jnp.mgrid[0:h, 0:w]
+    cy = jax.random.randint(k1, (cfg.n_obstacles,), 4, h - 4)
+    cx = jax.random.randint(k2, (cfg.n_obstacles,), 4, w - 4)
+    rad = jax.random.randint(k3, (cfg.n_obstacles,), 2, 6)
+    night = jax.random.uniform(k5, ()) < cfg.night_fraction
+    rgb_vis = jnp.where(night, cfg.rgb_vis_night, cfg.rgb_vis_day)
+    rgb_clear = jax.random.uniform(k4, (cfg.n_obstacles,)) < rgb_vis
+    th_clear = jax.random.uniform(k7, (cfg.n_obstacles,)) < cfg.thermal_vis
+
+    dist2 = (yy[None] - cy[:, None, None]) ** 2 + (xx[None] - cx[:, None, None]) ** 2
+    inside = dist2 <= (rad[:, None, None] ** 2)                 # (N, H, W)
+    gt = jnp.any(inside, axis=0).astype(jnp.float32)
+
+    rgb_strength = jnp.where(rgb_clear, cfg.strong, cfg.weak)[:, None, None]
+    th_strength = jnp.where(th_clear, cfg.strong, cfg.weak)[:, None, None]
+    rgb_det = jnp.max(inside * rgb_strength, axis=0)
+    th_det = jnp.max(inside * th_strength, axis=0)
+
+    noise = 0.06 * jax.random.uniform(k6, (2, h, w))
+    p_rgb = jnp.clip(rgb_det * (1 - noise[0]) + noise[0] * 0.5, 0.02, 0.98)
+    p_th = jnp.clip(th_det * (1 - noise[1]) + noise[1] * 0.5, 0.02, 0.98)
+    # background base rate
+    p_rgb = jnp.where(gt > 0, p_rgb, 0.05 + noise[0])
+    p_th = jnp.where(gt > 0, p_th, 0.05 + noise[1])
+    return gt, p_rgb, p_th, night
+
+
+def detection_metrics(gt: jnp.ndarray, p: jnp.ndarray, thresh: float = 0.6):
+    """(detection rate on gt pixels, false-positive rate, mean confidence on gt)."""
+    det = (p > thresh).astype(jnp.float32)
+    tp = jnp.sum(det * gt) / jnp.maximum(jnp.sum(gt), 1)
+    fp = jnp.sum(det * (1 - gt)) / jnp.maximum(jnp.sum(1 - gt), 1)
+    conf = jnp.sum(p * gt) / jnp.maximum(jnp.sum(gt), 1)
+    return tp, fp, conf

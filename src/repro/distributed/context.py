@@ -1,0 +1,80 @@
+"""Ambient mesh context: lets model code apply sharding constraints / shard_map
+EP without threading the mesh through every call signature.
+
+Launchers do ``with mesh_context(mesh): jit(...).lower(...)``.  When no mesh is
+active every helper is a no-op, so single-device tests run the same code path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    token = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def batch_axes() -> Tuple[str, ...]:
+    mesh = current_mesh()
+    if mesh is None:
+        return ()
+    from repro.distributed import sharding as _sharding
+
+    return _sharding.batch_axes(mesh)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint under the ambient mesh (no-op without one).
+
+    Spec entries: "batch" expands to the batch axes; None / axis names pass
+    through; axes not in the mesh are dropped.  Dims not divisible by their
+    axis product fall back to replicated (e.g. decode's seq dim of 1).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(mesh.shape)
+    resolved = []
+    used: set = set()
+    for dim, s in enumerate(spec):
+        if s == "batch":
+            ax = batch_axes()
+            s = ax if len(ax) > 1 else (ax[0] if ax else None)
+        if s is None:
+            resolved.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        # drop axes unknown to the mesh or already consumed by another dim
+        axes = tuple(a for a in axes if a in sizes and a not in used)
+        if not axes:
+            resolved.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if dim < x.ndim and x.shape[dim] % total == 0:
+            used.update(axes)
+            resolved.append(axes if len(axes) > 1 else axes[0])
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )

@@ -1,0 +1,2 @@
+from repro.kernels.fusion_map.ops import fusion_map  # noqa: F401
+from repro.kernels.fusion_map.ref import fusion_map_ref  # noqa: F401

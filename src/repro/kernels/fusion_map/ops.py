@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the fusion-map kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fusion_map.kernel import fusion_map_pallas
+from repro.kernels.fusion_map.ref import fusion_map_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def fusion_map(
+    p_modal: jnp.ndarray,
+    prior: jnp.ndarray | None = None,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Analytic eq-(5) fusion over class maps.
+
+    p_modal: (M, ..., K); prior (K,) or None (uniform).  Returns (..., K).
+    """
+    p_modal = jnp.asarray(p_modal, jnp.float32)
+    m = p_modal.shape[0]
+    k = p_modal.shape[-1]
+    if prior is None:
+        prior = jnp.full((k,), 1.0 / k, jnp.float32)
+    flat = p_modal.reshape(m, -1, k)
+    if use_kernel:
+        rows = flat.shape[1]
+        block = 256 if rows % 256 == 0 else (64 if rows % 64 == 0 else 1)
+        out = fusion_map_pallas(flat, prior, block_r=block, interpret=interpret)
+    else:
+        out = fusion_map_ref(flat, prior)
+    return out.reshape(p_modal.shape[1:])

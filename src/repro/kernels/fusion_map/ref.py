@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the analytic Bayesian fusion-map kernel (eq (5))."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fusion_map_ref(p_modal: jnp.ndarray, prior: jnp.ndarray) -> jnp.ndarray:
+    """Normalized multimodal fusion over per-pixel class posteriors.
+
+    p_modal: (M, R, K) float32 -- per-modality class posteriors for R pixels.
+    prior:   (K,) float32 class prior.
+    returns: (R, K) float32, rows sum to 1:
+             softmax_k( sum_m log p_mk - (M-1) log prior_k ).
+    """
+    m = p_modal.shape[0]
+    logq = jnp.sum(jnp.log(jnp.clip(p_modal, 1e-9, 1.0)), axis=0) - (
+        m - 1
+    ) * jnp.log(jnp.clip(prior, 1e-9, 1.0))
+    logq = logq - jnp.max(logq, axis=-1, keepdims=True)
+    q = jnp.exp(logq)
+    return q / jnp.sum(q, axis=-1, keepdims=True)

@@ -1,0 +1,2 @@
+from repro.kernels.pand_popcount.ops import pand_popcount  # noqa: F401
+from repro.kernels.pand_popcount.ref import pand_popcount_ref  # noqa: F401

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for the fused AND+popcount kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pand_popcount.kernel import pand_popcount_pallas
+from repro.kernels.pand_popcount.ref import pand_popcount_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def pand_popcount(
+    streams: jnp.ndarray, *, use_kernel: bool = True, interpret: bool = True
+) -> jnp.ndarray:
+    """Fused probabilistic-AND across modalities + popcount.
+
+    streams: (M, ..., n_words) uint32.  Returns (...,) int32 counts.
+    """
+    m = streams.shape[0]
+    n_words = streams.shape[-1]
+    flat = streams.reshape(m, -1, n_words)
+    if use_kernel:
+        rows = flat.shape[1]
+        block = 512 if rows % 512 == 0 else (64 if rows % 64 == 0 else 1)
+        out = pand_popcount_pallas(flat, block_r=block, interpret=interpret)
+    else:
+        out = pand_popcount_ref(flat)
+    return out.reshape(streams.shape[1:-1])

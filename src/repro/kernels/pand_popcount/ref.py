@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused probabilistic-AND + popcount kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _popcount_words(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def pand_popcount_ref(streams: jnp.ndarray) -> jnp.ndarray:
+    """AND-reduce streams over the leading modality axis, then popcount.
+
+    streams: (M, R, n_words) uint32 packed stochastic numbers.
+    returns: (R,) int32 -- number of set bits in AND_m streams[m] per row
+             (the Bayes-fusion numerator count, eq (5) before normalization).
+    """
+    acc = streams[0]
+    for i in range(1, streams.shape[0]):
+        acc = acc & streams[i]
+    return jnp.sum(_popcount_words(acc).astype(jnp.int32), axis=-1)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: stochastic number encoder (threshold + bit-plane pack).
+
+Maps the paper's SNE (memristor + comparator, Fig 2a) onto the VPU: for a block
+of streams the kernel compares pre-drawn random bytes against the 8-bit
+programmed threshold and packs 32 stream bits per uint32 lane word, entirely in
+VMEM.  The byte comparison is the comparator; the 8-bit threshold is the V_in
+programming DAC (DESIGN.md SS2).
+
+Tiling: grid over stream rows.  Block shapes keep the trailing (lane) dimension a
+multiple of 128 where shapes allow, and the whole working set
+(block_r x (n_rand + n_out) words) well inside the ~16 MB v5e VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sne_kernel(p_ref, rand_ref, out_ref):
+    p = p_ref[...]                       # (bR,) f32
+    rand = rand_ref[...]                 # (bR, n_rand) u32
+    thresh = jnp.clip(jnp.round(p * 256.0), 0.0, 256.0).astype(jnp.uint32)
+    n_rand = rand.shape[-1]
+    # 4 uniform bytes per random word.
+    acc = jnp.zeros(rand.shape[:-1] + (n_rand // 8,), jnp.uint32)
+    for byte in range(4):
+        lane = (rand >> jnp.uint32(8 * byte)) & jnp.uint32(0xFF)   # (bR, n_rand)
+        bits = (lane < thresh[..., None]).astype(jnp.uint32)
+        # bit j of output word w is stream bit (32w + j); stream bit index of
+        # (rand word r, byte b) is 4r + b -> out word w = r // 8,
+        # out bit j = 4 * (r % 8) + b.
+        grouped = bits.reshape(bits.shape[:-1] + (n_rand // 8, 8))
+        shifts = (jnp.arange(8, dtype=jnp.uint32) * 4 + byte).astype(jnp.uint32)
+        acc = acc + jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def sne_encode_pallas(
+    p: jnp.ndarray,
+    rand_words: jnp.ndarray,
+    *,
+    block_r: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """p: (R,) f32; rand_words: (R, n_rand) u32 -> (R, n_rand // 8) u32 packed."""
+    r, n_rand = rand_words.shape
+    assert n_rand % 8 == 0
+    n_out = n_rand // 8
+    block_r = min(block_r, r)
+    assert r % block_r == 0, f"rows {r} not divisible by block {block_r}"
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _sne_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+            pl.BlockSpec((block_r, n_rand), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n_out), jnp.uint32),
+        interpret=interpret,
+    )(p, rand_words)

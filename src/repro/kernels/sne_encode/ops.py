@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the SNE encode kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sne_encode.kernel import sne_encode_pallas
+from repro.kernels.sne_encode.ref import sne_encode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "use_kernel", "interpret"))
+def sne_encode(
+    key: jax.Array,
+    p: jnp.ndarray,
+    n_bits: int = 128,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Encode probabilities ``p`` (any shape) into packed stochastic numbers.
+
+    n_bits must be a multiple of 32.  Returns ``p.shape + (n_bits // 32,)`` uint32.
+    Entropy is drawn from the counter-based PRNG (the TPU stand-in for the
+    memristor's stochastic V_th; see DESIGN.md SS2) -- on real TPUs this becomes
+    in-kernel ``pltpu.prng_random_bits`` with identical semantics.
+    """
+    assert n_bits % 32 == 0, "kernel path packs whole uint32 words"
+    p = jnp.asarray(p, jnp.float32)
+    flat = p.reshape(-1)
+    n_rand = n_bits // 4  # 4 bytes (stream bits) per random word
+    rand = jax.random.bits(key, (flat.shape[0], n_rand), jnp.uint32)
+    if use_kernel:
+        rows = flat.shape[0]
+        block = 256 if rows % 256 == 0 else (64 if rows % 64 == 0 else 1)
+        out = sne_encode_pallas(flat, rand, block_r=block, interpret=interpret)
+    else:
+        out = sne_encode_ref(flat, rand)
+    return out.reshape(p.shape + (n_bits // 32,))

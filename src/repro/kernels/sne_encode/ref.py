@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SNE encode kernel.
+
+Semantics (shared with the kernel, bit-exact): probabilities are quantised to
+8 bits (the V_in programming DAC of the hardware SNE), each uint32 random word
+contributes its 4 bytes as 4 independent uniform(0..255) draws, and a stream bit
+is 1 iff ``byte < round(p * 256)``.  Output is packed LSB-first, 32 stream bits
+per word; ``n_bits = 4 * n_rand_words = 32 * n_out_words``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantise_p(p: jnp.ndarray) -> jnp.ndarray:
+    """Probability -> 8-bit threshold in [0, 256] (uint32 for comparisons)."""
+    return jnp.clip(jnp.round(p * 256.0), 0.0, 256.0).astype(jnp.uint32)
+
+
+def sne_encode_ref(p: jnp.ndarray, rand_words: jnp.ndarray) -> jnp.ndarray:
+    """Encode probabilities into packed stochastic numbers.
+
+    p:          (..., R) float32 target probabilities.
+    rand_words: (..., R, n_rand) uint32 entropy; n_rand must be divisible by 8.
+    returns:    (..., R, n_rand // 8) uint32 packed streams (n_bits = 4 * n_rand).
+    """
+    n_rand = rand_words.shape[-1]
+    assert n_rand % 8 == 0, "n_rand must be a multiple of 8 (32 bits per out word)"
+    thresh = quantise_p(p)[..., None, None]                       # (..., R, 1, 1)
+    shifts = jnp.arange(4, dtype=jnp.uint32) * 8
+    bytes_ = (rand_words[..., None] >> shifts) & jnp.uint32(0xFF)  # (..., n_rand, 4)
+    bits = (bytes_ < thresh).astype(jnp.uint32)                    # (..., n_rand, 4)
+    flat = bits.reshape(bits.shape[:-2] + (n_rand * 4,))           # n_bits
+    grouped = flat.reshape(flat.shape[:-1] + (n_rand // 8, 32))
+    pack_shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(grouped << pack_shifts, axis=-1).astype(jnp.uint32)

@@ -1,0 +1,509 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init).  512 host devices back the 2x16x16 production mesh.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import functools     # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES_BY_NAME, get_config  # noqa: E402
+from repro.configs.base import ShapeConfig  # noqa: E402
+from repro.distributed import context as dctx  # noqa: E402
+from repro.distributed import sharding  # noqa: E402
+from repro.launch import roofline as rf  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import api, transformer  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+LM_ARCHS = (
+    "qwen2-72b", "starcoder2-15b", "minitron-4b", "phi3-mini-3.8b",
+    "internvl2-26b", "recurrentgemma-2b", "xlstm-350m",
+    "llama4-scout-17b-a16e", "deepseek-v3-671b", "seamless-m4t-large-v2",
+)
+
+# long_500k needs sub-quadratic state; skips per DESIGN.md SS4
+LONG_OK = {"recurrentgemma-2b", "xlstm-350m", "llama4-scout-17b-a16e"}
+
+N_PATCH = 256  # internvl2 stub patch embeddings
+
+
+def cell_is_runnable(arch: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch not in LONG_OK and arch != "paper-bayes-fusion":
+        return False, "pure full-attention arch: 512k-token cache skip (DESIGN.md SS4)"
+    return True, ""
+
+
+# ----------------------------------------------------------------- input specs
+
+def input_specs(arch: str, shape: ShapeConfig, cfg) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if arch == "paper-bayes-fusion":
+        pixels = cfg.frames_per_batch * cfg.height * cfg.width
+        return {
+            "p_modal": jax.ShapeDtypeStruct((cfg.modalities, pixels, cfg.classes), f32),
+            "rand": jax.ShapeDtypeStruct(
+                (cfg.modalities, pixels, cfg.classes, cfg.n_bits // 4), jnp.uint32
+            ),
+        }
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": jax.ShapeDtypeStruct((b, _text_len(cfg, s)), i32)}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, _text_len(cfg, s)), i32)
+        extra = _extra_len(cfg, s)
+        if extra:
+            out["extra_embeds"] = jax.ShapeDtypeStruct((b, extra, cfg.d_model), f32)
+        return out
+    # decode: one new token against a cache of length s
+    return {"token": jax.ShapeDtypeStruct((b,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def _text_len(cfg, s: int) -> int:
+    return s - N_PATCH if cfg.family == "vlm" else s
+
+
+def _extra_len(cfg, s: int) -> int:
+    if cfg.family == "vlm":
+        return N_PATCH
+    if cfg.family == "audio":
+        return s // cfg.enc_ratio
+    return 0
+
+
+# --------------------------------------------------------------- step builders
+
+def make_train_fn(cfg, microbatches: int = 1):
+    opt_cfg = adamw.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    lambda p: api.loss(p, cfg, mb), has_aux=True
+                )(params)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(
+                    (microbatches, x.shape[0] // microbatches) + x.shape[1:]
+                ),
+                batch,
+            )
+            if cfg.unroll_layers:   # calibration: count every microbatch
+                carry = (zero, 0.0)
+                for i in range(microbatches):
+                    carry, _ = micro(carry, jax.tree.map(lambda x: x[i], mbs))
+                gsum, lsum = carry
+            else:
+                (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: api.loss(p, cfg, batch), has_aux=True
+            )(params)
+        new_params, new_opt, metrics = adamw.apply(grads, opt_state, opt_cfg)
+        return new_params, new_opt, metrics["grad_norm"], loss
+
+    return train_step
+
+
+def make_bayes_fn(cfg, path: str = "both", rng_inside: bool = False):
+    """Movie-S1-scale fusion step (pure-jnp path of the kernels).
+
+    path:      "both" (stochastic circuit + analytic oracle), "stochastic",
+               or "analytic" (the production recommendation -- SSPerf finding).
+    rng_inside: fold entropy generation into the step (in-kernel PRNG on real
+               TPUs) instead of streaming pre-drawn words from HBM.
+    """
+    from repro.kernels.fusion_map.ref import fusion_map_ref
+    from repro.kernels.pand_popcount.ref import pand_popcount_ref
+    from repro.kernels.sne_encode.ref import sne_encode_ref
+
+    prior_of = lambda p: jnp.full((p.shape[-1],), 1.0 / p.shape[-1], jnp.float32)
+
+    if path == "analytic":
+        def bayes_step(p_modal):
+            analytic = fusion_map_ref(p_modal, prior_of(p_modal))
+            return jnp.argmax(analytic, -1), jnp.max(analytic, -1), analytic
+
+        return bayes_step
+
+    def stochastic(p_modal, rand):
+        m = p_modal.shape[0]
+        streams = sne_encode_ref(p_modal, rand)      # (M, pixels, K, W)
+        counts = pand_popcount_ref(
+            streams.reshape(m, -1, streams.shape[-1])
+        ).reshape(p_modal.shape[1:])                 # (pixels, K)
+        cf = counts.astype(jnp.float32)
+        stoch = cf / jnp.maximum(cf.sum(-1, keepdims=True), 1.0)
+        out = (jnp.argmax(stoch, -1), jnp.max(stoch, -1))
+        if path == "both":
+            return out + (fusion_map_ref(p_modal, prior_of(p_modal)),)
+        return out + (stoch,)
+
+    if rng_inside:
+        def bayes_step(p_modal):
+            rand = jax.random.bits(
+                jax.random.PRNGKey(0),
+                p_modal.shape + (cfg.n_bits // 4,), jnp.uint32,
+            )
+            return stochastic(p_modal, rand)
+
+        return bayes_step
+
+    return stochastic
+
+
+# ---------------------------------------------------------------- model flops
+
+def model_flops(cfg, shape: ShapeConfig, params_shapes) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (2*N*D forward-only), MoE uses N_active."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_shapes)
+    total = expert = embed = 0.0
+    for path, leaf in flat:
+        n = float(np.prod(leaf.shape))
+        keys = [getattr(e, "key", None) for e in path]
+        total += n
+        if "moe" in keys and any(k in ("wi", "wg", "wo") for k in keys):
+            expert += n
+        if keys[-1] == "embed":
+            embed += n
+    if cfg.moe is not None:
+        active = total - expert + expert * cfg.moe.top_k / cfg.moe.num_experts
+    else:
+        active = total
+    n_eff = active - embed  # embedding gather is not a matmul
+    if shape.kind == "train":
+        return 6.0 * n_eff * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_eff * shape.global_batch * shape.seq_len
+    tokens = shape.global_batch
+    attn = 0.0
+    if cfg.family != "ssm":
+        hd = cfg.resolved_head_dim
+        attn = 4.0 * shape.global_batch * shape.seq_len * cfg.num_heads * hd * cfg.num_layers
+    return 2.0 * n_eff * tokens + attn
+
+
+# -------------------------------------------------------------------- lowering
+
+def _batch_spec(mesh, v):
+    bax = sharding.batch_axes(mesh)
+    return NamedSharding(mesh, P(bax) if v.ndim == 2 else P(bax, None, None))
+
+
+def _batch_div(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in sharding.batch_axes(mesh)]))
+
+
+def _init_state_abstract(cfg, batch: int, t_cache: int):
+    if cfg.family == "audio":
+        from repro.models import layers as L
+
+        hd = cfg.resolved_head_dim
+        enc_len = t_cache // cfg.enc_ratio
+        return {
+            "self": jax.tree.map(
+                lambda z: jnp.stack([z] * cfg.dec_layers),
+                L.init_kv_cache(batch, t_cache, cfg.num_kv_heads, hd),
+            ),
+            "cross": {
+                "k": jnp.zeros((cfg.dec_layers, batch, enc_len, cfg.num_kv_heads, hd), jnp.bfloat16),
+                "v": jnp.zeros((cfg.dec_layers, batch, enc_len, cfg.num_kv_heads, hd), jnp.bfloat16),
+            },
+        }
+    return transformer.init_decode_state(cfg, batch, t_cache)
+
+
+def build_lowered(cfg, shape: ShapeConfig, mesh, arch: str, microbatches: int = 1):
+    """Lower the cell's step function (train/prefill/decode) under the mesh."""
+    specs = input_specs(arch, shape, cfg)
+    params_shapes = jax.eval_shape(functools.partial(api.init, cfg), jax.random.PRNGKey(0))
+    pshard = sharding.param_shardings(params_shapes, mesh)
+
+    with dctx.mesh_context(mesh):
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+            oshard = adamw.OptState(
+                step=NamedSharding(mesh, P()), master=pshard, m=pshard, v=pshard
+            )
+            bshard = {k: _batch_spec(mesh, v) for k, v in specs.items()}
+            lowered = jax.jit(
+                make_train_fn(cfg, microbatches), in_shardings=(pshard, oshard, bshard)
+            ).lower(params_shapes, opt_shapes, specs)
+        elif shape.kind == "prefill":
+            bshard = {k: _batch_spec(mesh, v) for k, v in specs.items()}
+            fn = lambda params, batch: api.prefill(params, cfg, batch, shape.seq_len)
+            lowered = jax.jit(fn, in_shardings=(pshard, bshard)).lower(
+                params_shapes, specs
+            )
+        else:
+            state_shapes = jax.eval_shape(
+                lambda: _init_state_abstract(cfg, shape.global_batch, shape.seq_len)
+            )
+            sshard = sharding.state_specs_for_cache(state_shapes, mesh)
+            tok_shard = NamedSharding(
+                mesh,
+                P(sharding.batch_axes(mesh))
+                if shape.global_batch % _batch_div(mesh) == 0 else P(),
+            )
+            fn = lambda params, token, state, pos: api.decode(params, cfg, token, state, pos)
+            lowered = jax.jit(
+                fn, in_shardings=(pshard, tok_shard, sshard, NamedSharding(mesh, P()))
+            ).lower(params_shapes, specs["token"], state_shapes, specs["pos"])
+    return lowered, params_shapes
+
+
+def reduced_cfg(cfg, r: int):
+    """Full-width, depth-r-repetitions, unrolled config for cost calibration."""
+    big = 1 << 30
+    if cfg.family == "audio":
+        return dataclasses.replace(
+            cfg, enc_layers=r, dec_layers=r, num_layers=2 * r,
+            unroll_layers=True, q_chunk=big, mlstm_chunk=big,
+        )
+    n = len(cfg.prefix_kinds) + r * len(cfg.pattern)
+    return dataclasses.replace(
+        cfg, num_layers=n, unroll_layers=True, q_chunk=big, mlstm_chunk=big,
+    )
+
+
+def _measure(cfg, shape, mesh, arch, microbatches: int = 1):
+    """(flops, bytes, collective_bytes) per chip for one lower+compile."""
+    lowered, _ = build_lowered(cfg, shape, mesh, arch, microbatches)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    cbytes, by_kind = rf.collective_bytes(compiled.as_text())
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        float(cbytes),
+        by_kind,
+    )
+
+
+def calibrate(cfg, shape, mesh, arch, microbatches: int = 1):
+    """Exact per-chip (flops, bytes, collective bytes) via unrolled reps 1 & 2.
+
+    XLA's cost analysis counts while-loop bodies once, so the production scan
+    lower undercounts by ~num_layers.  Unrolled reduced-depth lowers at FULL
+    width give exact fixed + per-rep terms: total = fixed + body * reps.
+    """
+    f1 = _measure(reduced_cfg(cfg, 1), shape, mesh, arch, microbatches)
+    f2 = _measure(reduced_cfg(cfg, 2), shape, mesh, arch, microbatches)
+    if cfg.family == "audio":
+        reps = cfg.enc_layers  # enc and dec scale together in the reduced cfg
+    else:
+        reps = (cfg.num_layers - len(cfg.prefix_kinds)) // len(cfg.pattern)
+    body = tuple(b2 - b1 for b1, b2 in zip(f1[:3], f2[:3]))
+    fixed = tuple(b1 - bd for b1, bd in zip(f1[:3], body))
+    total = tuple(fx + bd * reps for fx, bd in zip(fixed, body))
+    by_kind = {
+        k: (f1[3].get(k, 0) - (f2[3].get(k, 0) - f1[3].get(k, 0)))
+        + (f2[3].get(k, 0) - f1[3].get(k, 0)) * reps
+        for k in set(f1[3]) | set(f2[3])
+    }
+    return total, by_kind
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, variant: str = "baseline"):
+    """Lower + compile one (arch x shape x mesh) cell; returns result dict."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+
+    if arch == "paper-bayes-fusion":
+        cfg, opts = apply_variant(get_config(arch), variant)
+        shape = SHAPES_BY_NAME.get(shape_name, SHAPES_BY_NAME["train_4k"])
+        specs = input_specs(arch, shape, cfg)
+        all_axes = tuple(mesh.axis_names)
+        fn = make_bayes_fn(cfg, path=opts["bayes_path"], rng_inside=opts["rng_inside"])
+        with dctx.mesh_context(mesh):
+            if opts["rng_inside"] or opts["bayes_path"] == "analytic":
+                lowered = jax.jit(
+                    fn, in_shardings=(NamedSharding(mesh, P(None, all_axes, None)),)
+                ).lower(specs["p_modal"])
+            else:
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=(
+                        NamedSharding(mesh, P(None, all_axes, None)),
+                        NamedSharding(mesh, P(None, all_axes, None, None)),
+                    ),
+                ).lower(specs["p_modal"], specs["rand"])
+            compiled = lowered.compile()
+        pixels = cfg.frames_per_batch * cfg.height * cfg.width
+        mflops = 10.0 * pixels * cfg.classes * cfg.modalities
+        roof = rf.from_compiled(arch, shape_name, mesh_name, chips, compiled, mflops)
+        return _result(roof, compiled, t0, variant, calibrated=False)
+
+    cfg, opts = apply_variant(get_config(arch), variant)
+    shape = SHAPES_BY_NAME[shape_name]
+    micro = opts["microbatches"]
+
+    # production lower: scan-over-layers; memory analysis + collective schedule
+    lowered, params_shapes = build_lowered(cfg, shape, mesh, arch, micro)
+    compiled = lowered.compile()
+    mflops = model_flops(cfg, shape, params_shapes)
+
+    # calibrated roofline terms (exact flops/bytes/collectives)
+    (flops, nbytes, cbytes), by_kind = calibrate(cfg, shape, mesh, arch, micro)
+    roof = rf.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=nbytes,
+        collective_bytes_per_chip=cbytes, collective_by_kind=by_kind,
+        model_flops_total=mflops,
+    ).finalize()
+    return _result(roof, compiled, t0, variant, calibrated=True)
+
+
+def apply_variant(cfg, variant: str):
+    """Named config variants for the SSPerf hillclimb.
+
+    Returns (cfg, opts) where opts carries non-config knobs (microbatches,
+    fsdp2d sharding policy, paper-bayes path selection).
+    """
+    from repro.distributed import sharding as _sh
+
+    opts = {"microbatches": 1, "bayes_path": "both", "rng_inside": False}
+    _sh.POLICY["fsdp2d"] = False
+    if variant == "baseline":
+        return cfg, opts
+    changes = {}
+    for part in variant.split("+"):
+        if part == "nosp":
+            changes["seq_shard"] = False
+        elif part.startswith("qchunk"):
+            changes["q_chunk"] = int(part[len("qchunk"):])
+        elif part.startswith("mchunk"):
+            changes["mlstm_chunk"] = int(part[len("mchunk"):])
+        elif part == "moedense":
+            changes["moe"] = dataclasses.replace(cfg.moe, impl="dense")
+        elif part == "fsdp2d":
+            _sh.POLICY["fsdp2d"] = True
+        elif part.startswith("micro"):
+            opts["microbatches"] = int(part[len("micro"):])
+        elif part in ("analytic", "stochastic"):
+            opts["bayes_path"] = part
+        elif part.startswith("bits"):
+            changes["n_bits"] = int(part[len("bits"):])
+        elif part == "rnginside":
+            opts["rng_inside"] = True
+        else:
+            raise ValueError(f"unknown variant component {part!r}")
+    return dataclasses.replace(cfg, **changes), opts
+
+
+def _result(roof: rf.Roofline, compiled, t0: float, variant: str, calibrated: bool) -> dict:
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_size_gb": getattr(ma, "argument_size_in_bytes", 0) / 1e9,
+            "output_size_gb": getattr(ma, "output_size_in_bytes", 0) / 1e9,
+            "temp_size_gb": getattr(ma, "temp_size_in_bytes", 0) / 1e9,
+        }
+        roof.peak_memory_bytes = float(
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+    counts = rf.collective_counts(compiled.as_text())
+    return {
+        "variant": variant,
+        "ok": True,
+        "calibrated": calibrated,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory_analysis": mem,
+        "collective_counts_schedule": counts,
+        **roof.to_dict(),
+    }
+
+
+# ------------------------------------------------------------------------ main
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(LM_ARCHS) + ["paper-bayes-fusion"] if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            if arch == "paper-bayes-fusion" and shape_name != "train_4k":
+                continue  # one canonical cell for the paper workload
+            runnable, why = cell_is_runnable(arch, shape_name)
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                if args.variant != "baseline":
+                    tag += f"__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    ok_prev = json.load(open(path)).get("ok", False)
+                    if ok_prev:
+                        print(f"[skip existing] {tag}")
+                        continue
+                if not runnable:
+                    with open(path, "w") as f:
+                        json.dump({"ok": False, "skipped": True, "reason": why,
+                                   "arch": arch, "shape": shape_name,
+                                   "mesh": mesh_name}, f, indent=1)
+                    print(f"[skipped] {tag}: {why}")
+                    continue
+                try:
+                    res = lower_cell(arch, shape_name, multi, args.variant)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1, default=str)
+                    print(
+                        f"[ok] {tag}: compile={res['compile_seconds']}s "
+                        f"flops/chip={res['flops_per_chip']:.3e} "
+                        f"coll={res['collective_bytes_per_chip']:.3e}B "
+                        f"bottleneck={res['bottleneck']} "
+                        f"temp={res['memory_analysis'].get('temp_size_gb', -1):.1f}GB",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    with open(path, "w") as f:
+                        json.dump({"ok": False, "error": str(e),
+                                   "trace": traceback.format_exc()[-4000:],
+                                   "arch": arch, "shape": shape_name,
+                                   "mesh": mesh_name}, f, indent=1)
+                    print(f"[FAIL] {tag}: {str(e)[:300]}", flush=True)
+    print(f"done; failures={failures}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

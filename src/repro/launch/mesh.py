@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state.  Single pod: 16 x 16 = 256 v5e chips (data x model).
+Multi-pod: 2 x 16 x 16 = 512 chips with a leading `pod` axis -- only gradient
+all-reduce (and optional pipeline collectives) cross the pod boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, shape=(2, 2), axes=("data", "model")):
+    """Small mesh for multi-device subprocess tests (8 host devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,141 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs(total) / (chips x 197 TFLOP/s)
+  memory     = HLO_bytes(total) / (chips x 819 GB/s)
+  collective = collective_bytes_per_chip / 50 GB/s-per-link
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (the partitioned module
+-> per-device numbers; multiplied back to totals for reporting).  Collective
+bytes are parsed from the post-SPMD HLO text: per-device bytes moved, counting
+ring all-reduce as 2x payload and all-gather/reduce-scatter/all-to-all/
+collective-permute as 1x (the (n-1)/n factor is folded to 1 at n >= 16).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+# collective opcodes; -start variants counted, -done skipped (same transfer)
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Per-device collective bytes moved, by op kind."""
+    by_kind: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind, _ = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(shape_str)
+        factor = 2 if kind == "all-reduce" else 1
+        by_kind[kind] = by_kind.get(kind, 0) + factor * nbytes
+    return sum(by_kind.values()), by_kind
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        kind = m.group(2)
+        counts[kind] = counts.get(kind, 0) + 1
+    return counts
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_by_kind: Dict[str, int]
+    model_flops_total: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    peak_memory_bytes: float = 0.0
+
+    def finalize(self):
+        self.compute_s = self.flops_per_chip / PEAK_FLOPS_BF16
+        self.memory_s = self.bytes_per_chip / HBM_BW
+        self.collective_s = self.collective_bytes_per_chip / ICI_BW
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        hlo_total = self.flops_per_chip * self.chips
+        self.useful_ratio = (
+            self.model_flops_total / hlo_total if hlo_total > 0 else 0.0
+        )
+        return self
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def from_compiled(
+    arch: str, shape: str, mesh_name: str, chips: int,
+    compiled, model_flops_total: float,
+) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older API returns one dict per device
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    cbytes, by_kind = collective_bytes(hlo)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_size": getattr(ma, "argument_size_in_bytes", 0),
+            "output_size": getattr(ma, "output_size_in_bytes", 0),
+            "temp_size": getattr(ma, "temp_size_in_bytes", 0),
+            "generated_code_size": getattr(ma, "generated_code_size_in_bytes", 0),
+        }
+    except Exception:
+        pass
+    peak = float(mem.get("argument_size", 0) + mem.get("output_size", 0)
+                 + mem.get("temp_size", 0))
+    r = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=nbytes,
+        collective_bytes_per_chip=float(cbytes),
+        collective_by_kind=by_kind,
+        model_flops_total=model_flops_total,
+        peak_memory_bytes=peak,
+    ).finalize()
+    return r

@@ -1,0 +1,1 @@
+from repro.models import api, bayes_head, encdec, layers, mla, moe, rglru, transformer, xlstm  # noqa: F401

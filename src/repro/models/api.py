@@ -1,0 +1,52 @@
+"""Family-dispatch facade over the model zoo.
+
+All launchers (train, serve, dryrun, tests) go through these four functions so
+that decoder-only, enc-dec and multimodal-stub architectures share one calling
+convention:
+
+  init(cfg, key)                        -> params
+  loss(params, cfg, batch)              -> (scalar, metrics)   [train_step]
+  prefill(params, cfg, batch, t_cache)  -> (last logits, state)
+  decode(params, cfg, token, state, pos)-> (logits, state)
+
+``batch`` carries "tokens"/"labels" and, for vlm/audio stubs, "extra_embeds"
+(precomputed patch/frame embeddings -- the assignment's frontend stub).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+
+
+def init(cfg, key):
+    if cfg.family == "audio":
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def loss(params, cfg, batch):
+    if cfg.family == "audio":
+        return encdec.loss_fn(params, cfg, batch)
+    return transformer.loss_fn(params, cfg, batch)
+
+
+def prefill(params, cfg, batch, t_cache: int):
+    if cfg.family == "audio":
+        return encdec.prefill(params, cfg, batch["extra_embeds"], batch["tokens"], t_cache)
+    return transformer.prefill(
+        params, cfg, batch["tokens"], t_cache, batch.get("extra_embeds")
+    )
+
+
+def decode(params, cfg, token, state, pos):
+    if cfg.family == "audio":
+        return encdec.decode_step(params, cfg, token, state, pos)
+    return transformer.decode_step(params, cfg, token, state, pos)
+
+
+def param_count(params) -> int:
+    import jax
+
+    return int(sum(x.size for x in jax.tree.leaves(params)))

@@ -1,0 +1,82 @@
+"""Bayes decision head: the paper's operators at the LM decision layer.
+
+Fuses K-way token posteriors from multiple conditionally-independent sources
+(MTP head vs main head, modality branches, ensemble samples) with eq (5), and
+gates emission on the fused confidence -- the LM analogue of the paper's
+timely-reliable lane-change decision (DESIGN.md SS4).
+
+Two paths, mirroring core/:
+* analytic  -- float eq (5) over top-k candidate tokens (production).
+* stochastic -- packed SNE streams + AND + popcount (the paper's circuit),
+  available for validation and for the paper_bayes config.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, sne
+from repro.core.fusion import fuse_analytic
+
+
+def fuse_posteriors(
+    logits_sources: jnp.ndarray, top_k: int = 8
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fuse per-source next-token posteriors over the union top-k candidates.
+
+    logits_sources: (M, B, V).  Returns (token (B,), confidence (B,),
+    fused_topk (B, top_k)).  Candidates are the top-k of the mean logits; each
+    source's posterior is restricted + renormalized over candidates, then fused
+    with eq (5) under a uniform candidate prior.
+    """
+    m, b, v = logits_sources.shape
+    mean_logits = jnp.mean(logits_sources, axis=0)
+    _, cand = jax.lax.top_k(mean_logits, top_k)                  # (B, k)
+    cand_logits = jnp.take_along_axis(
+        logits_sources, cand[None].repeat(m, 0), axis=-1
+    )                                                            # (M, B, k)
+    p = jax.nn.softmax(cand_logits, axis=-1)
+    p = jnp.moveaxis(p, 0, -2)                                   # (B, M, k)
+    fused = fuse_analytic(p)                                     # (B, k)
+    best = jnp.argmax(fused, axis=-1)
+    token = jnp.take_along_axis(cand, best[:, None], axis=-1)[:, 0]
+    conf = jnp.take_along_axis(fused, best[:, None], axis=-1)[:, 0]
+    return token, conf, fused
+
+
+def reliable_decision(
+    token: jnp.ndarray, conf: jnp.ndarray, threshold: float = 0.7
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Timely-reliable gating: emit only when fused confidence clears threshold.
+
+    Returns (accept (B,) bool, token).  Rejected positions fall back to the
+    caller's policy (resample, defer to a bigger model, keep lane -- the paper's
+    P(A|B) < P(A) branch).
+    """
+    return conf >= threshold, token
+
+
+def fuse_posteriors_stochastic(
+    key: jax.Array, logits_sources: jnp.ndarray, top_k: int = 8, n_bits: int = 256
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Same decision through the paper's SC circuit (SNE + AND + popcount)."""
+    m, b, v = logits_sources.shape
+    mean_logits = jnp.mean(logits_sources, axis=0)
+    _, cand = jax.lax.top_k(mean_logits, top_k)
+    cand_logits = jnp.take_along_axis(
+        logits_sources, cand[None].repeat(m, 0), axis=-1
+    )
+    p = jax.nn.softmax(cand_logits, axis=-1)                     # (M, B, k)
+    streams = sne.encode_uncorrelated(key, p, n_bits)            # (M, B, k, W)
+    numer = streams[0]
+    for i in range(1, m):
+        numer = bitops.band(numer, streams[i])
+    counts = bitops.popcount(numer).astype(jnp.float32)          # (B, k)
+    fused = counts / jnp.maximum(counts.sum(-1, keepdims=True), 1.0)
+    best = jnp.argmax(fused, axis=-1)
+    token = jnp.take_along_axis(cand, best[:, None], axis=-1)[:, 0]
+    conf = jnp.take_along_axis(fused, best[:, None], axis=-1)[:, 0]
+    return token, conf

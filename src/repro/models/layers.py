@@ -1,0 +1,318 @@
+"""Shared neural-net layers (functional, pytree params, sharding-friendly).
+
+Everything is pure functions over nested-dict params.  Initializers return
+params; apply functions take (params, x).  Layer stacks are scanned, so params
+for a stack carry a leading layer axis.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Pad vocab to a lane/shard-friendly multiple (masked out in the loss)."""
+    return -(-v // multiple) * multiple
+
+
+# --- initializers ------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --- norms ------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# --- RoPE -------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                        # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLPs -------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, kind: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], d, d_ff, dtype),
+            "wg": dense_init(ks[1], d, d_ff, dtype),
+            "wo": dense_init(ks[2], d_ff, d, dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d, d_ff, dtype),
+        "wo": dense_init(ks[2], d_ff, d, dtype),
+    }
+
+
+def apply_mlp(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    h = x @ params["wi"]
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["wg"]) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    return h @ params["wo"]
+
+
+# --- attention --------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype=jnp.bfloat16):
+    """Standard (possibly grouped-query) attention projections."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _mask_bias(kind: str, q_pos, k_pos, window: int, chunk: int) -> jnp.ndarray:
+    """Additive mask (0 / -inf) of shape (q, k) for the given attention kind."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = kp <= qp                      # causal
+    if kind == "local":
+        ok &= kp > qp - window
+    elif kind == "chunk":
+        ok &= (kp // chunk) == (qp // chunk)
+    elif kind == "full_bidir":
+        ok = jnp.ones_like(ok)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def multihead_attention(
+    q: jnp.ndarray,            # (B, S, H, hd)
+    k: jnp.ndarray,            # (B, T, KV, hd)
+    v: jnp.ndarray,            # (B, T, KV, hd)
+    *,
+    kind: str = "causal",      # causal | local | chunk | full_bidir
+    window: int = 0,
+    chunk: int = 0,
+    q_positions: jnp.ndarray,  # (S,) absolute positions of queries
+    k_positions: jnp.ndarray,  # (T,)
+    k_valid: jnp.ndarray | None = None,  # (T,) bool for cache slots
+    q_chunk: int = 512,
+) -> jnp.ndarray:
+    """Query-chunked attention (bounded score memory) with GQA broadcast.
+
+    KV heads are broadcast up to the full head count before the score einsum so
+    the head axis stays cleanly shardable over `model` (a (kv, group) einsum
+    factorization would contract over the sharded head_dim and psum per chunk).
+    Per device the broadcast materialises only that device's head shard.
+    """
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    scale = hd ** -0.5
+
+    def attend(q_blk, qpos_blk):
+        # q_blk: (B, C, H, hd)
+        scores = jnp.einsum(
+            "bchd,bthd->bhct", q_blk.astype(jnp.float32), k.astype(jnp.float32)
+        )
+        scores *= scale
+        bias = _mask_bias(kind, qpos_blk, k_positions, window, chunk)  # (C, T)
+        if k_valid is not None:
+            bias = bias + jnp.where(k_valid[None, :], 0.0, -jnp.inf)
+        scores = scores + bias[None, None]
+        # guard fully-masked rows (e.g. empty cache): softmax of all -inf
+        smax = jnp.max(scores, axis=-1, keepdims=True)
+        smax = jnp.maximum(smax, -1e30)
+        w = jnp.exp(scores - smax)
+        denom = jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+        w = (w / denom).astype(v.dtype)
+        return jnp.einsum("bhct,bthd->bchd", w, v)
+
+    vd = v.shape[-1]  # value head dim may differ from hd (MLA)
+    if s <= q_chunk:
+        out = attend(q, q_positions)
+    else:
+        n_chunks = -(-s // q_chunk)
+        pad = n_chunks * q_chunk - s
+        qg_p = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos_p = jnp.pad(q_positions, (0, pad), constant_values=0)
+        qg_c = qg_p.reshape(b, n_chunks, q_chunk, h, hd).swapaxes(0, 1)
+        qpos_c = qpos_p.reshape(n_chunks, q_chunk)
+        out = jax.lax.map(lambda args: attend(*args), (qg_c, qpos_c))
+        out = out.swapaxes(0, 1).reshape(b, n_chunks * q_chunk, h, vd)[:, :s]
+    return out.reshape(b, s, h, vd)
+
+
+def cache_len_for_kind(kind: str, seq_len: int, window: int, chunk: int) -> int:
+    """KV-cache slots needed per layer kind (bounded for local/chunked layers)."""
+    if kind == "local" and window:
+        return min(seq_len, window)
+    if kind == "chunk" and chunk:
+        return min(seq_len, chunk)
+    return seq_len
+
+
+def init_kv_cache(batch: int, t_cache: int, kvh: int, hd: int, dtype=jnp.bfloat16):
+    """Rolling KV cache: slot positions start at -1 (invalid)."""
+    return {
+        "k": jnp.zeros((batch, t_cache, kvh, hd), dtype),
+        "v": jnp.zeros((batch, t_cache, kvh, hd), dtype),
+        "pos": jnp.full((t_cache,), -1, jnp.int32),
+    }
+
+
+def gqa_apply(
+    params,
+    x: jnp.ndarray,
+    cfg,
+    *,
+    kind: str,
+    positions: jnp.ndarray,
+    rope: bool = True,
+    cache: dict | None = None,
+    cache_pos: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, dict | None]:
+    """Full GQA block: proj -> rope -> (cache update) -> attention -> out proj.
+
+    cache: rolling buffer from :func:`init_kv_cache`; new k/v are written at slot
+    ``cache_pos % t_cache`` (local/chunked layers keep only a bounded window; full
+    layers size t_cache = max seq so the rolling write is the identity).
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None and s == 1:
+        # decode: write k,v at the rolling slot, attend over the cache
+        t_cache = cache["k"].shape[1]
+        slot = cache_pos % t_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1
+        )
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), slot, axis=0
+        )
+        out = multihead_attention(
+            q, ck, cv, kind=kind, window=cfg.window, chunk=cfg.chunk,
+            q_positions=positions, k_positions=cpos, k_valid=cpos >= 0,
+            q_chunk=cfg.q_chunk,
+        )
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        # train / prefill: attend over the full fresh k,v
+        out = multihead_attention(
+            q, k, v, kind=kind, window=cfg.window, chunk=cfg.chunk,
+            q_positions=positions, k_positions=positions, q_chunk=cfg.q_chunk,
+        )
+        if cache is not None:
+            # fill the cache with the (window) tail of the prompt
+            t_cache = cache["k"].shape[1]
+            if s >= t_cache:
+                new_cache = {
+                    "k": k[:, s - t_cache :].astype(cache["k"].dtype),
+                    "v": v[:, s - t_cache :].astype(cache["v"].dtype),
+                    "pos": positions[s - t_cache :].astype(jnp.int32),
+                }
+            else:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        cache["k"], k.astype(cache["k"].dtype), 0, axis=1
+                    ),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        cache["v"], v.astype(cache["v"].dtype), 0, axis=1
+                    ),
+                    "pos": jax.lax.dynamic_update_slice_in_dim(
+                        cache["pos"], positions.astype(jnp.int32), 0, axis=0
+                    ),
+                }
+        else:
+            new_cache = None
+    out = out.reshape(b, s, h * hd) @ params["wo"]
+    return out, new_cache
+
+
+def cross_attention_init(key, cfg, dtype=jnp.bfloat16):
+    return gqa_init(key, cfg, dtype)
+
+
+def cross_attention_apply(params, x, enc_out, cfg, *, cache=None):
+    """Decoder cross-attention over encoder output (keys/values from enc_out)."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    if cache is not None and "k" in cache:
+        k, v = cache["k"], cache["v"]
+    else:
+        t = enc_out.shape[1]
+        k = (enc_out @ params["wk"]).reshape(b, t, kvh, hd)
+        v = (enc_out @ params["wv"]).reshape(b, t, kvh, hd)
+    t = k.shape[1]
+    out = multihead_attention(
+        q, k, v, kind="full_bidir",
+        q_positions=jnp.arange(s), k_positions=jnp.arange(t),
+        q_chunk=cfg.q_chunk,
+    )
+    out = out.reshape(b, s, h * hd) @ params["wo"]
+    return out, {"k": k, "v": v}

@@ -1,0 +1,143 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are projected through low-rank latents; the KV cache
+stores only the compressed latent (kv_lora_rank) plus the shared RoPE key
+(qk_rope_dim) per token -- the memory insight of MLA.  Decode reconstructs
+k_nope/v from the cached latent.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def mla_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": layers.dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": layers.norm_init(cfg.q_lora_rank, "rmsnorm"),
+        "w_uq": layers.dense_init(
+            ks[1], cfg.q_lora_rank, h * (cfg.qk_nope_dim + cfg.qk_rope_dim), dtype
+        ),
+        "w_dkv": layers.dense_init(
+            ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype
+        ),
+        "kv_norm": layers.norm_init(cfg.kv_lora_rank, "rmsnorm"),
+        "w_ukv": layers.dense_init(
+            ks[3], cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_head_dim), dtype
+        ),
+        "wo": layers.dense_init(ks[4], h * cfg.v_head_dim, d, dtype),
+    }
+
+
+def _expand_kv(params, latent: jnp.ndarray, cfg):
+    """latent (B, T, kv_lora) -> k_nope (B,T,H,nope), v (B,T,H,vdim)."""
+    b, t, _ = latent.shape
+    h = cfg.num_heads
+    kv = latent @ params["w_ukv"]
+    kv = kv.reshape(b, t, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    return kv[..., : cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim :]
+
+
+def mla_apply(
+    params,
+    x: jnp.ndarray,
+    cfg,
+    *,
+    positions: jnp.ndarray,
+    cache: dict | None = None,
+    cache_pos: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, dict | None]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+
+    qc = layers.apply_norm(params["q_norm"], x @ params["w_dq"], "rmsnorm")
+    q = (qc @ params["w_uq"]).reshape(b, s, h, qd)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ params["w_dkv"]
+    latent = layers.apply_norm(params["kv_norm"], dkv[..., : cfg.kv_lora_rank], "rmsnorm")
+    k_rope = dkv[..., cfg.kv_lora_rank :].reshape(b, s, 1, cfg.qk_rope_dim)
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)
+
+    if cache is not None:
+        t_cache = cache["latent"].shape[1]
+        slot = cache_pos % t_cache
+        clat = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), slot, axis=1
+        )
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slot, axis=1
+        )
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), slot, axis=0
+        )
+        new_cache = {"latent": clat, "k_rope": ckr, "pos": cpos}
+        if s == 1:
+            # absorbed-weight decode: attend directly in the latent space, never
+            # re-expanding the cache (the MLA decode optimization).
+            w_ukv = params["w_ukv"].reshape(
+                cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim
+            )
+            w_k, w_v = w_ukv[..., : cfg.qk_nope_dim], w_ukv[..., cfg.qk_nope_dim :]
+            q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_k)     # (B,1,H,kv_lora)
+            scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+            scores = (
+                jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32), clat.astype(jnp.float32))
+                + jnp.einsum(
+                    "bshr,btzr->bhst",
+                    q_rope.astype(jnp.float32),
+                    ckr.astype(jnp.float32),
+                )
+            ) * scale
+            ok = (cpos[None, :] <= positions[:, None]) & (cpos >= 0)[None, :]
+            scores = scores + jnp.where(ok, 0.0, -jnp.inf)[None, None]
+            w = jax.nn.softmax(scores, axis=-1)
+            ctx_lat = jnp.einsum("bhst,btr->bshr", w, clat.astype(jnp.float32))
+            ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_v.astype(jnp.float32))
+            out = ctx.reshape(b, 1, h * cfg.v_head_dim).astype(x.dtype) @ params["wo"]
+            return out, new_cache
+        k_nope_full, v_full = _expand_kv(params, clat, cfg)
+        k_rope_full = ckr
+        k_positions, k_valid = cpos, cpos >= 0
+    else:
+        k_nope_full, v_full = _expand_kv(params, latent, cfg)
+        k_rope_full = k_rope
+        k_positions, k_valid = positions, None
+        new_cache = None
+
+    # concat nope+rope parts; rope key is shared across heads (broadcast)
+    k_full = jnp.concatenate(
+        [
+            k_nope_full,
+            jnp.broadcast_to(
+                k_rope_full, k_rope_full.shape[:2] + (h, cfg.qk_rope_dim)
+            ),
+        ],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = layers.multihead_attention(
+        q_full, k_full, v_full, kind="causal",
+        q_positions=positions, k_positions=k_positions, k_valid=k_valid,
+        q_chunk=cfg.q_chunk,
+    )
+    out = out.reshape(b, s, h * cfg.v_head_dim) @ params["wo"]
+    return out, new_cache
+
+
+def mla_init_cache(batch: int, t_cache: int, cfg, dtype=jnp.bfloat16) -> dict:
+    return {
+        "latent": jnp.zeros((batch, t_cache, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, t_cache, 1, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((t_cache,), -1, jnp.int32),
+    }

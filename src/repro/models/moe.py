@@ -1,0 +1,186 @@
+"""Mixture-of-experts with sort-based capacity dispatch (EP over the model axis).
+
+Dispatch avoids the (T, E, C) dense one-hot tensor (infeasible at E=256): tokens
+are replicated k times, sorted by expert id, truncated at per-expert capacity and
+scattered into an (E, C, D) buffer.  Expert weights are sharded over the `model`
+mesh axis (expert parallelism); under GSPMD the expert einsum shards over E and
+the combine produces the EP collective.  ``impl="dense"`` keeps a tiny all-expert
+einsum for smoke-scale correctness checks.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def moe_init(key, cfg, dtype=jnp.bfloat16):
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    def stack_init(k, n, d_in, d_out):
+        kk = jax.random.split(k, n)
+        return jnp.stack([layers.dense_init(ki, d_in, d_out, dtype) for ki in kk])
+    p = {
+        "router": layers.dense_init(ks[0], d, e.num_experts, jnp.float32),
+        "wi": stack_init(ks[1], e.num_experts, d, e.d_ff_expert),
+        "wg": stack_init(ks[2], e.num_experts, d, e.d_ff_expert),
+        "wo": stack_init(ks[3], e.num_experts, e.d_ff_expert, d),
+    }
+    if e.num_shared:
+        p["shared"] = layers.mlp_init(ks[4], d, e.d_ff_expert * e.num_shared, cfg.mlp, dtype)
+    return p
+
+
+def _router_probs(logits: jnp.ndarray, kind: str, top_k: int):
+    """Top-k routing weights, normalized over the selected experts."""
+    if kind == "sigmoid":            # deepseek-v3 style scoring
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_ids = jax.lax.top_k(scores, top_k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    return top_vals, top_ids
+
+
+def _expert_ffn(p, xe: jnp.ndarray, mlp_kind: str) -> jnp.ndarray:
+    """xe: (E, C, D) -> (E, C, D) through per-expert gated MLPs."""
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    if mlp_kind in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+        act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def moe_apply(params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Under an ambient mesh with impl="masked" this wraps the layer in shard_map:
+    tokens stay sharded over the batch axes (replicated over `model`), experts
+    are sharded over `model` (EP), and the partial expert outputs are combined
+    with one psum over `model` -- the Megatron-style masked-EP collective.
+    """
+    from repro.distributed import context as dctx
+
+    mesh = dctx.current_mesh()
+    e = cfg.moe
+    if mesh is not None and e.impl == "masked" and "model" in mesh.axis_names \
+            and e.num_experts % mesh.shape["model"] == 0:
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+
+        bax = dctx.batch_axes()
+        bsize = int(np.prod([mesh.shape[a] for a in bax])) if bax else 1
+        if x.shape[0] % bsize != 0:
+            bax = ()                                 # tiny batch: replicate it
+        bspec = bax if len(bax) > 1 else (bax[0] if bax else None)
+        # expert-stacked leaves shard over model on dim 0.  The SHARED expert
+        # stays OUTSIDE the shard_map: inside it would be recomputed per model
+        # shard (TPx redundant flops -- measured 10x useful-compute loss on
+        # llama4; EXPERIMENTS SSPerf).  Outside, it is an ordinary TP MLP.
+        ep_params = {k: v for k, v in params.items() if k != "shared"}
+        expert_spec = {"wi": P("model", None, None), "wg": P("model", None, None),
+                       "wo": P("model", None, None)}
+        pspec = {k: expert_spec.get(k, jax.tree.map(lambda _: P(), v))
+                 for k, v in ep_params.items()}
+        fn = shard_map(
+            lambda p, xx: _moe_local_ep(p, xx, cfg),
+            mesh=mesh,
+            in_specs=(pspec, P(bspec, None, None)),
+            out_specs=(P(bspec, None, None), P()),
+            check_rep=False,
+        )
+        out, aux = fn(ep_params, x)
+        if e.num_shared:
+            b, s, d = x.shape
+            shared = layers.apply_mlp(params["shared"], x.reshape(-1, d), cfg.mlp)
+            out = out + shared.reshape(b, s, d)
+        return out, aux
+    return _moe_local(params, x, cfg)
+
+
+def _moe_local_ep(params, x, cfg):
+    """shard_map body: local tokens x local experts, psum-combined over `model`."""
+    out, aux = _moe_local(params, x, cfg, local_experts=True)
+    out = jax.lax.psum(out, "model")
+    aux = jax.lax.pmean(aux, "model")
+    return out, aux
+
+
+def _moe_local(params, x: jnp.ndarray, cfg, local_experts: bool = False):
+    e = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt.astype(jnp.float32)) @ params["router"]         # (T, E)
+    weights, ids = _router_probs(logits, e.router, e.top_k)      # (T, k)
+
+    # load-balancing aux loss (Switch-style): mean prob * mean assignment
+    probs = jax.nn.softmax(logits, axis=-1)
+    assign = jnp.zeros((t, e.num_experts), jnp.float32)
+    one_hot0 = jax.nn.one_hot(ids[:, 0], e.num_experts, dtype=jnp.float32)
+    assign = assign + one_hot0
+    aux = jnp.mean(probs.mean(0) * assign.mean(0)) * e.num_experts * e.num_experts
+
+    if e.impl == "dense":
+        # all-experts einsum (smoke scale only)
+        h = jnp.einsum("td,edf->tef", xt, params["wi"])
+        if cfg.mlp in ("swiglu", "geglu"):
+            g = jnp.einsum("td,edf->tef", xt, params["wg"])
+            act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+            h = act(g) * h
+        out_e = jnp.einsum("tef,efd->ted", h, params["wo"])       # (T, E, D)
+        gate = jnp.zeros((t, e.num_experts), out_e.dtype)
+        gate = gate.at[jnp.arange(t)[:, None], ids].set(weights.astype(out_e.dtype))
+        out = jnp.einsum("ted,te->td", out_e, gate)
+    else:
+        # sort-based capacity dispatch over the experts this shard owns
+        k = e.top_k
+        e_local = params["wi"].shape[0]          # = E, or E/TP inside shard_map
+        if local_experts and e_local != e.num_experts:
+            offset = jax.lax.axis_index("model") * e_local
+            ids_here = ids - offset              # local expert ids; others -> oob
+        else:
+            ids_here = ids
+        cap = int(e.capacity_factor * k * t / e.num_experts)
+        # small-T floor (decode steps): room for every assignment, bounded at 16
+        cap = max(cap, min(t * k, 16))
+        flat_ids = jnp.clip(ids_here.reshape(-1), -1, e_local)   # (T*k,)
+        oob = (flat_ids < 0) | (flat_ids >= e_local)
+        flat_ids = jnp.where(oob, e_local, flat_ids)             # overflow row
+        flat_w = weights.reshape(-1).astype(x.dtype)
+        tok_ix = jnp.repeat(jnp.arange(t), k)                    # source token
+        order = jnp.argsort(flat_ids)                            # stable group-by
+        sid = flat_ids[order]
+        stok = tok_ix[order]
+        sw = flat_w[order]
+        # position within expert group
+        grp_start = jnp.searchsorted(sid, jnp.arange(e_local + 1), side="left")
+        pos_in_e = jnp.arange(t * k) - grp_start[jnp.clip(sid, 0, e_local)]
+        keep = (pos_in_e < cap) & (sid < e_local)                # capacity drop
+        dst_e = jnp.where(keep, sid, e_local)                    # overflow row
+        dst_c = jnp.where(keep, pos_in_e % cap, 0)
+        buf = jnp.zeros((e_local + 1, cap, d), x.dtype)
+        buf = buf.at[dst_e, dst_c].set(xt[stok])
+        out_buf = _expert_ffn(params, buf[:e_local], cfg.mlp)
+        out_buf = jnp.concatenate(
+            [out_buf, jnp.zeros((1, cap, d), out_buf.dtype)], axis=0
+        )
+        # combine: gather each (token, k) slot's expert output, weight, sum
+        gathered = out_buf[dst_e, dst_c] * sw[:, None]           # (T*k, D)
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        out = jnp.zeros((t, d), x.dtype).at[stok].add(gathered)
+
+    if e.num_shared and "shared" in params:
+        # (EP path strips the shared expert out and applies it as a TP MLP
+        # outside the shard_map -- see moe_apply)
+        out = out + layers.apply_mlp(params["shared"], xt, cfg.mlp)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,98 @@
+"""RG-LRU recurrence block (RecurrentGemma / Griffin).
+
+Temporal mixing: conv1d(width 4) -> gated linear recurrent unit with
+input-dependent diagonal decay, computed with ``jax.lax.associative_scan``
+(training/prefill) or a single recurrent step (decode).  State is O(width),
+which is what makes long_500k feasible for this family.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin appendix)
+
+
+def rglru_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": layers.dense_init(ks[0], d, w, dtype),        # input branch
+        "wy": layers.dense_init(ks[1], d, w, dtype),        # gate branch
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32) * 0.02).astype(dtype),
+        "w_input_gate": layers.dense_init(ks[3], w, w, dtype),
+        "w_rec_gate": layers.dense_init(ks[4], w, w, dtype),
+        # Lambda param: stationary decay in (0.9, 0.999)
+        "lambda_raw": jnp.asarray(
+            jax.random.uniform(ks[5], (w,), jnp.float32, 0.4, 0.8), jnp.float32
+        ),
+        "wo": layers.dense_init(ks[6], w, d, dtype),
+    }
+
+
+def _conv1d(x: jnp.ndarray, kernel: jnp.ndarray, state: jnp.ndarray | None):
+    """Causal depthwise conv. x: (B, S, W); kernel: (cw, W); state: (B, cw-1, W)."""
+    cw = kernel.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * kernel[i][None, None, :] for i in range(cw)
+    )
+    new_state = xp[:, -(cw - 1) :, :] if cw > 1 else jnp.zeros_like(x[:, :0])
+    return out, new_state
+
+
+def rglru_apply(
+    params, x: jnp.ndarray, cfg, state: dict | None = None
+) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (out (B, S, D), new_state {"conv", "h"})."""
+    xb = x @ params["wx"]
+    gate_branch = jax.nn.gelu(x @ params["wy"])
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _conv1d(xb, params["conv"], conv_state)
+
+    i_gate = jax.nn.sigmoid(xc @ params["w_input_gate"])
+    r_gate = jax.nn.sigmoid(xc @ params["w_rec_gate"])
+    log_lam = -_C * jax.nn.softplus(params["lambda_raw"]) * r_gate.astype(jnp.float32)
+    a = jnp.exp(log_lam)                                   # decay in (0,1)
+    gated_x = (i_gate * xc).astype(jnp.float32)
+    # normalized input scaling (Griffin): sqrt(1 - a^2)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6))
+    u = beta * gated_x
+
+    h0 = None if state is None else state["h"]
+    if x.shape[1] == 1 and h0 is not None:
+        h = a[:, 0] * h0 + u[:, 0]
+        ht = h[:, None, :]
+        new_h = h
+    else:
+        # associative scan over the diagonal recurrence h_t = a_t h_{t-1} + u_t
+        if h0 is not None:
+            u = u.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(c1, c2):
+            a1, u1 = c1
+            a2, u2 = c2
+            return a1 * a2, a2 * u1 + u2
+
+        a_s, h_s = jax.lax.associative_scan(combine, (a, u), axis=1)
+        ht = h_s
+        new_h = h_s[:, -1]
+    out = (ht.astype(x.dtype) * gate_branch) @ params["wo"]
+    return out, {"conv": new_conv, "h": new_h}
+
+
+def rglru_init_state(batch: int, cfg, dtype=jnp.bfloat16) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

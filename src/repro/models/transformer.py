@@ -1,0 +1,363 @@
+"""Decoder-only model assembly for all block kinds.
+
+The layer stack is organised as ``prefix_kinds`` (unscanned) followed by
+``lax.scan`` over repetitions of the config's ``pattern`` super-block, keeping
+HLO size independent of depth.  Each block kind owns (init, apply-train,
+apply-decode, init-state) entries in ``_KINDS``.
+
+Entry points:
+  init_params(cfg, key)
+  forward(params, cfg, tokens, extra_embeds)          -> logits
+  loss_fn(params, cfg, batch)                          -> scalar loss, metrics
+  prefill(params, cfg, tokens, t_cache)                -> (last_logits, state)
+  decode_step(params, cfg, token, state, pos)          -> (logits, state)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dctx
+from repro.models import layers, mla, moe, rglru, xlstm
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- blocks
+
+def _has_moe(cfg, kind: str) -> bool:
+    return cfg.moe is not None and kind in ("attn", "attn_local", "attn_chunk", "attn_global", "mla")
+
+
+def block_init(key, cfg, kind: str, *, dense_ff: int | None = None) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"norm1": layers.norm_init(d, cfg.norm)}
+    if kind in ("attn", "attn_local", "attn_chunk", "attn_global"):
+        p["attn"] = layers.gqa_init(ks[0], cfg)
+    elif kind == "mla":
+        p["attn"] = mla.mla_init(ks[0], cfg)
+    elif kind == "rec":
+        p["rec"] = rglru.rglru_init(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mix"] = xlstm.mlstm_init(ks[0], cfg)
+        return p  # mLSTM block has no separate MLP
+    elif kind == "slstm":
+        p["mix"] = xlstm.slstm_init(ks[0], cfg)
+        return p
+    else:
+        raise ValueError(kind)
+    p["norm2"] = layers.norm_init(d, cfg.norm)
+    if _has_moe(cfg, kind) and dense_ff is None:
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    else:
+        ff = dense_ff if dense_ff is not None else cfg.d_ff
+        p["mlp"] = layers.mlp_init(ks[1], d, ff, cfg.mlp)
+    return p
+
+
+def block_apply(
+    params: Params,
+    x: jnp.ndarray,
+    cfg,
+    kind: str,
+    *,
+    positions: jnp.ndarray,
+    state: Any = None,
+    cache_pos: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """Returns (x_out, new_state, aux_loss)."""
+    aux = jnp.float32(0.0)
+    sp = cfg.seq_shard and x.shape[1] > 1
+    h = layers.apply_norm(params["norm1"], x, cfg.norm)
+    if sp:
+        # Megatron-style SP: residual stream lives seq-sharded; gather the full
+        # sequence only at the mixer/MLP entry, reduce-scatter on the way out.
+        h = dctx.constrain(h, "batch", None, None)
+    if kind in ("attn", "attn_local", "attn_chunk", "attn_global"):
+        akind = {"attn": "causal", "attn_local": "local", "attn_chunk": "chunk", "attn_global": "causal"}[kind]
+        mix, new_state = layers.gqa_apply(
+            params["attn"], h, cfg, kind=akind, positions=positions,
+            rope=(kind != "attn_global"), cache=state, cache_pos=cache_pos,
+        )
+    elif kind == "mla":
+        mix, new_state = mla.mla_apply(
+            params["attn"], h, cfg, positions=positions, cache=state, cache_pos=cache_pos
+        )
+    elif kind == "rec":
+        mix, new_state = rglru.rglru_apply(params["rec"], h, cfg, state)
+    elif kind == "mlstm":
+        mix, new_state = xlstm.mlstm_apply(params["mix"], h, cfg, state)
+        if sp:
+            mix = dctx.constrain(mix, "batch", "model", None)
+        return x + mix, new_state, aux
+    elif kind == "slstm":
+        mix, new_state = xlstm.slstm_apply(params["mix"], h, cfg, state)
+        if sp:
+            mix = dctx.constrain(mix, "batch", "model", None)
+        return x + mix, new_state, aux
+    else:
+        raise ValueError(kind)
+    if sp:
+        mix = dctx.constrain(mix, "batch", "model", None)   # reduce-scatter
+    x = x + mix
+    h2 = layers.apply_norm(params["norm2"], x, cfg.norm)
+    if sp:
+        h2 = dctx.constrain(h2, "batch", None, None)        # all-gather
+    if "moe" in params:
+        ff_out, aux = moe.moe_apply(params["moe"], h2, cfg)
+    else:
+        ff_out = layers.apply_mlp(params["mlp"], h2, cfg.mlp)
+    if sp:
+        ff_out = dctx.constrain(ff_out, "batch", "model", None)
+    return x + ff_out, new_state, aux
+
+
+def block_init_state(cfg, kind: str, batch: int, t_cache: int):
+    """Decode-time state for one block of the given kind (None for train)."""
+    if kind in ("attn", "attn_local", "attn_chunk", "attn_global"):
+        tl = layers.cache_len_for_kind(
+            {"attn": "causal", "attn_local": "local", "attn_chunk": "chunk", "attn_global": "causal"}[kind],
+            t_cache, cfg.window, cfg.chunk,
+        )
+        return layers.init_kv_cache(batch, tl, cfg.num_kv_heads, cfg.resolved_head_dim)
+    if kind == "mla":
+        return mla.mla_init_cache(batch, t_cache, cfg)
+    if kind == "rec":
+        return rglru.rglru_init_state(batch, cfg)
+    if kind == "mlstm":
+        return xlstm.mlstm_init_state(batch, cfg)
+    if kind == "slstm":
+        return xlstm.slstm_init_state(batch, cfg)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------- model
+
+def _layer_plan(cfg) -> Tuple[Tuple[str, ...], int]:
+    """(prefix kinds, number of scanned pattern repetitions)."""
+    n_scanned = cfg.num_layers - len(cfg.prefix_kinds)
+    assert n_scanned % len(cfg.pattern) == 0, (
+        f"{cfg.name}: {n_scanned} layers not divisible by pattern {cfg.pattern}"
+    )
+    return cfg.prefix_kinds, n_scanned // len(cfg.pattern)
+
+
+def init_params(cfg, key) -> Params:
+    prefix, reps = _layer_plan(cfg)
+    ks = jax.random.split(key, 5)
+    vocab = layers.pad_vocab(cfg.vocab_size)
+    p: Params = {
+        "embed": layers.embed_init(ks[0], vocab, cfg.d_model),
+        "final_norm": layers.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.dense_init(ks[1], cfg.d_model, vocab)
+    # unscanned prefix layers
+    pk = jax.random.split(ks[2], max(len(prefix), 1))
+    p["prefix"] = [
+        block_init(pk[i], cfg, k if k != "attn_dense_prefix" else "mla",
+                   dense_ff=cfg.dense_d_ff if k == "attn_dense_prefix" else None)
+        for i, k in enumerate(prefix)
+    ]
+    # scanned super-blocks: stack params along leading axis per pattern position
+    def one_superblock(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return tuple(block_init(kk[i], cfg, kind) for i, kind in enumerate(cfg.pattern))
+
+    sk = jax.random.split(ks[3], reps)
+    per_rep = [one_superblock(k) for k in sk]
+    p["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+    if cfg.mtp_heads:
+        p["mtp"] = {
+            "proj": layers.dense_init(ks[4], 2 * cfg.d_model, cfg.d_model),
+            "block": block_init(jax.random.fold_in(ks[4], 1), cfg, cfg.pattern[0]),
+            "norm": layers.norm_init(cfg.d_model, cfg.norm),
+        }
+    return p
+
+
+def _prefix_kind(k: str) -> str:
+    return "mla" if k == "attn_dense_prefix" else k
+
+
+def forward(
+    params: Params,
+    cfg,
+    tokens: jnp.ndarray,
+    extra_embeds: jnp.ndarray | None = None,
+    *,
+    return_hidden: bool = False,
+):
+    """Teacher-forced forward pass -> logits (B, S, vocab_padded)."""
+    prefix, reps = _layer_plan(cfg)
+    x = params["embed"][tokens]
+    if extra_embeds is not None:
+        # multimodal stub frontend: precomputed patch/frame embeddings prepended
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = dctx.constrain(x, "batch", None, None)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    aux_total = jnp.float32(0.0)
+
+    for pparams, kind in zip(params["prefix"], prefix):
+        x, _, aux = block_apply(pparams, x, cfg, _prefix_kind(kind), positions=positions)
+        aux_total += aux
+
+    def superblock(carry, blk_params):
+        x, aux_acc = carry
+        aux_step = jnp.float32(0.0)
+        for i, kind in enumerate(cfg.pattern):
+            x, _, aux = block_apply(blk_params[i], x, cfg, kind, positions=positions)
+            aux_step += aux
+        if cfg.seq_shard:
+            # SP: keep the scan-carry residual stream sequence-sharded over
+            # `model` so saved activations are 1/TP per chip (DESIGN.md SS5)
+            x = dctx.constrain(x, "batch", "model", None)
+        return (x, aux_acc + aux_step), None
+
+    if cfg.unroll_layers:
+        # dry-run calibration path: every layer explicit in HLO (exact
+        # cost_analysis; XLA counts while bodies once)
+        for r in range(reps):
+            blk = jax.tree.map(lambda p: p[r], params["blocks"])
+            (x, aux_total), _ = superblock((x, aux_total), blk)
+    else:
+        (x, aux_total), _ = jax.lax.scan(
+            jax.checkpoint(superblock), (x, aux_total), params["blocks"]
+        )
+    h = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return h, aux_total
+    logits = h @ (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return logits, aux_total
+
+
+def loss_fn(params: Params, cfg, batch: Dict[str, jnp.ndarray]):
+    """Causal LM loss (+ optional deepseek MTP auxiliary loss)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    extra = batch.get("extra_embeds")
+    vocab = layers.pad_vocab(cfg.vocab_size)
+    h, aux = forward(params, cfg, tokens, extra, return_hidden=True)
+    if extra is not None:
+        h = h[:, extra.shape[1]:]          # loss only over text positions
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (h @ unembed).astype(jnp.float32)
+    # keep the big logits tensor vocab-sharded over `model` (GSPMD reduces the
+    # softmax across shards rather than materialising (B, S, V) per device)
+    logits = dctx.constrain(logits, "batch", None, "model")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    metrics = {"nll": loss, "aux": aux}
+    if cfg.mtp_heads and "mtp" in params:
+        # multi-token prediction: predict t+2 from [h_t ; emb(t+1)]
+        emb_next = params["embed"][tokens[:, 1:]]
+        hcat = jnp.concatenate([h[:, :-1], emb_next], axis=-1)
+        h2 = hcat @ params["mtp"]["proj"]
+        h2, _, _ = block_apply(
+            params["mtp"]["block"], h2, cfg, cfg.pattern[0],
+            positions=jnp.arange(h2.shape[1]),
+        )
+        h2 = layers.apply_norm(params["mtp"]["norm"], h2, cfg.norm)
+        logits2 = (h2 @ unembed).astype(jnp.float32)
+        # position t of h2 predicts token t+2, whose label is labels[t+1]
+        mtp_labels = labels[:, 1:]
+        logp2 = jax.nn.log_softmax(logits2, axis=-1)
+        nll2 = -jnp.take_along_axis(logp2, mtp_labels[..., None], axis=-1)[..., 0]
+        mtp_loss = nll2.mean()
+        metrics["mtp_nll"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    loss = loss + 0.01 * aux
+    return loss, metrics
+
+
+# ------------------------------------------------------------------------- serving
+
+def init_decode_state(cfg, batch: int, t_cache: int):
+    prefix, reps = _layer_plan(cfg)
+    state = {
+        "prefix": [
+            block_init_state(cfg, _prefix_kind(k), batch, t_cache) for k in prefix
+        ],
+        "blocks": [],
+    }
+    # scanned: stack states along leading rep axis per pattern position
+    per_pos = []
+    for kind in cfg.pattern:
+        one = block_init_state(cfg, kind, batch, t_cache)
+        stacked = jax.tree.map(lambda x: jnp.stack([x] * reps), one)
+        per_pos.append(stacked)
+    state["blocks"] = tuple(per_pos)
+    return state
+
+
+def _run_stack(params, cfg, x, positions, state, cache_pos):
+    """Shared prefill/decode driver over prefix + scanned blocks, with state."""
+    prefix, _ = _layer_plan(cfg)
+    new_prefix_states = []
+    for pparams, kind, st in zip(params["prefix"], prefix, state["prefix"]):
+        x, nst, _ = block_apply(
+            pparams, x, cfg, _prefix_kind(kind), positions=positions,
+            state=st, cache_pos=cache_pos,
+        )
+        new_prefix_states.append(nst)
+
+    def superblock(carry, scanned):
+        x = carry
+        blk_params, blk_states = scanned
+        new_states = []
+        for i, kind in enumerate(cfg.pattern):
+            x, nst, _ = block_apply(
+                blk_params[i], x, cfg, kind, positions=positions,
+                state=blk_states[i], cache_pos=cache_pos,
+            )
+            new_states.append(nst)
+        if cfg.seq_shard and x.shape[1] > 1:
+            x = dctx.constrain(x, "batch", "model", None)
+        return x, tuple(new_states)
+
+    if cfg.unroll_layers:
+        _, reps = _layer_plan(cfg)
+        outs = []
+        for r in range(reps):
+            blk = jax.tree.map(lambda p: p[r], (params["blocks"], state["blocks"]))
+            x, nst = superblock(x, blk)
+            outs.append(nst)
+        new_block_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_block_states = jax.lax.scan(
+            superblock, x, (params["blocks"], state["blocks"])
+        )
+    return x, {"prefix": new_prefix_states, "blocks": new_block_states}
+
+
+def prefill(params: Params, cfg, tokens: jnp.ndarray, t_cache: int,
+            extra_embeds: jnp.ndarray | None = None):
+    """Process the prompt, fill caches; returns (last-token logits, state)."""
+    x = params["embed"][tokens]
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)
+    state = init_decode_state(cfg, b, t_cache)
+    x, state = _run_stack(params, cfg, x, positions, state, jnp.int32(0))
+    h = layers.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (h @ unembed)[:, 0].astype(jnp.float32)
+    return logits, state
+
+
+def decode_step(params: Params, cfg, token: jnp.ndarray, state, pos: jnp.ndarray):
+    """One decode step: token (B,) at absolute position ``pos`` (scalar)."""
+    x = params["embed"][token][:, None, :]
+    positions = jnp.full((1,), pos, jnp.int32)
+    x, state = _run_stack(params, cfg, x, positions, state, pos)
+    h = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (h @ unembed)[:, 0].astype(jnp.float32)
+    return logits, state

@@ -1,0 +1,220 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM trains with a chunkwise-parallel linear-attention formulation (exact
+w.r.t. the recurrence, sub-quadratic) and decodes with the O(d_k x d_v)
+recurrent state.  sLSTM is inherently sequential (exponential-gated scalar
+memory with normalizer/stabilizer state) and runs under ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# --------------------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    di = 2 * d                      # up-projection factor 2 (xLSTM paper)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": layers.dense_init(ks[0], d, di, dtype),
+        "w_gate": layers.dense_init(ks[1], d, di, dtype),
+        "wq": layers.dense_init(ks[2], di, di, dtype),
+        "wk": layers.dense_init(ks[3], di, di, dtype),
+        "wv": layers.dense_init(ks[4], di, di, dtype),
+        "w_i": layers.dense_init(ks[5], di, cfg.num_heads, jnp.float32),
+        "w_f": layers.dense_init(ks[6], di, cfg.num_heads, jnp.float32),
+        "w_down": layers.dense_init(ks[7], di, d, dtype),
+    }
+
+
+def mlstm_init_state(batch: int, cfg) -> dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = 2 * d // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_chunk(carry, inputs, dh):
+    """One chunk of the exact chunkwise-parallel mLSTM.
+
+    carry: (C_hat (B,NH,DK,DV), n_hat (B,NH,DK), m (B,NH)) -- stabilized state
+           (true C = C_hat * exp(m)).
+    inputs: q,k,v (B,L,NH,DH), log_i/log_f (B,L,NH) for this chunk.
+    """
+    C_in, n_in, m_in = carry
+    q, k, v, log_i, log_f = inputs
+    b, l, nh, _ = q.shape
+    scale = dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    fc = jnp.cumsum(log_f, axis=1)                               # (B, L, NH)
+    # intra-chunk log weights: dmat[t, s] = fc_t - fc_s + log_i_s  (s <= t)
+    dmat = fc[:, :, None, :] - fc[:, None, :, :] + log_i[:, None, :, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    # carry log weight at t: fc_t + m_in
+    carry_logw = fc + m_in[:, None, :]                           # (B, L, NH)
+    m_t = jnp.maximum(jnp.max(dmat, axis=2), carry_logw)         # (B, L, NH)
+    m_t = jnp.maximum(m_t, -1e30)
+    dexp = jnp.exp(dmat - m_t[:, :, None, :])                    # (B, L, S, NH)
+    cexp = jnp.exp(carry_logw - m_t)                             # (B, L, NH)
+
+    scores = jnp.einsum("blhd,bshd->blsh", qf, kf)
+    w = scores * dexp
+    num = jnp.einsum("blsh,bshd->blhd", w, vf) + cexp[..., None] * jnp.einsum(
+        "blhk,bhkv->blhv", qf, C_in
+    )
+    den = jnp.sum(w, axis=2) + cexp * jnp.einsum("blhk,bhk->blh", qf, n_in)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # end-of-chunk state
+    fc_last = fc[:, -1, :]                                       # (B, NH)
+    logw_s = fc_last[:, None, :] - fc + log_i                    # (B, L, NH)
+    m_out = jnp.maximum(jnp.max(logw_s, axis=1), fc_last + m_in)
+    sexp = jnp.exp(logw_s - m_out[:, None, :])
+    C_out = jnp.exp(fc_last + m_in - m_out)[..., None, None] * C_in + jnp.einsum(
+        "bsh,bshk,bshv->bhkv", sexp, kf, vf
+    )
+    n_out = jnp.exp(fc_last + m_in - m_out)[..., None] * n_in + jnp.einsum(
+        "bsh,bshk->bhk", sexp, kf
+    )
+    return (C_out, n_out, m_out), h
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, state, chunk: int = 256):
+    """Exact chunkwise mLSTM: scan over chunks, parallel within each chunk."""
+    b, s, nh, dh = q.shape
+    l = min(chunk, s)
+    pad = (-s) % l
+    if pad:
+        padf = lambda x, fill=0.0: jnp.pad(
+            x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2), constant_values=fill
+        )
+        q, k, v = padf(q), padf(k), padf(v)
+        log_i = padf(log_i, -1e30)   # padding never contributes (i gate ~ 0)
+        log_f = padf(log_f, 0.0)
+    nc = q.shape[1] // l
+
+    def reshape_c(x):
+        return jnp.moveaxis(
+            x.reshape(b, nc, l, *x.shape[2:]), 1, 0
+        )  # (nc, B, L, ...)
+
+    seq = tuple(reshape_c(x) for x in (q, k, v, log_i, log_f))
+    carry0 = (state["C"], state["n"], state["m"])
+    (C, n, m), hs = jax.lax.scan(
+        lambda c, inp: _mlstm_chunk(c, inp, dh), carry0, seq
+    )
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, nc * l, nh, dh)[:, :s]
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_apply(params, x: jnp.ndarray, cfg, state: dict | None = None) -> Tuple[jnp.ndarray, dict]:
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    di = 2 * d
+    dh = di // nh
+    up = x @ params["w_up"]
+    gate = jax.nn.silu(x @ params["w_gate"])
+    q = (up @ params["wq"]).reshape(b, s, nh, dh)
+    k = (up @ params["wk"]).reshape(b, s, nh, dh)
+    v = (up @ params["wv"]).reshape(b, s, nh, dh)
+    log_i = jax.nn.log_sigmoid(up.astype(jnp.float32) @ params["w_i"])
+    log_f = jax.nn.log_sigmoid(up.astype(jnp.float32) @ params["w_f"])
+
+    if s == 1 and state is not None:
+        # recurrent decode step (exact)
+        qs, ks_, vs = q[:, 0], k[:, 0], v[:, 0]
+        li, lf = log_i[:, 0], log_f[:, 0]
+        m_new = jnp.maximum(lf + state["m"], li)
+        fgate = jnp.exp(lf + state["m"] - m_new)[..., None]
+        igate = jnp.exp(li - m_new)[..., None]
+        C = fgate[..., None] * state["C"] + igate[..., None] * (
+            ks_[..., :, None] * vs[..., None, :]
+        )
+        n = fgate * state["n"] + igate * ks_
+        scale = dh ** -0.5
+        num = jnp.einsum("bhk,bhkv->bhv", qs.astype(jnp.float32) * scale, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qs.astype(jnp.float32) * scale, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        ht = h.reshape(b, 1, di)
+        new_state = {"C": C, "n": n, "m": m_new}
+    else:
+        if state is None:
+            state = mlstm_init_state(b, cfg)
+        h, new_state = _mlstm_chunked(q, k, v, log_i, log_f, state, chunk=cfg.mlstm_chunk)
+        ht = h.reshape(b, s, di)
+    out = (ht.astype(x.dtype) * gate) @ params["w_down"]
+    return out, new_state
+
+
+# --------------------------------------------------------------------------- sLSTM
+
+def slstm_init(key, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "w_z": layers.dense_init(ks[0], d, d, dtype),
+        "w_i": layers.dense_init(ks[1], d, d, jnp.float32),
+        "w_f": layers.dense_init(ks[2], d, d, jnp.float32),
+        "w_o": layers.dense_init(ks[3], d, d, dtype),
+        "ffn": layers.mlp_init(ks[4], d, int(d * 4 // 3) * 2, "swiglu", dtype),
+    }
+
+
+def slstm_init_state(batch: int, cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_apply(params, x: jnp.ndarray, cfg, state: dict | None = None) -> Tuple[jnp.ndarray, dict]:
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_init_state(b, cfg)
+    z_in = jnp.tanh((x @ params["w_z"]).astype(jnp.float32))
+    i_in = x.astype(jnp.float32) @ params["w_i"]
+    f_in = x.astype(jnp.float32) @ params["w_f"]
+    o_in = jax.nn.sigmoid((x @ params["w_o"]).astype(jnp.float32))
+
+    def step(carry, t_in):
+        c, n, m, _ = carry
+        z_t, i_t, f_t, o_t = t_in
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        fg = jnp.exp(log_f + m - m_new)
+        ig = jnp.exp(i_t - m_new)
+        c_new = fg * c + ig * z_t
+        n_new = fg * n + ig
+        h = o_t * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h), h
+
+    seq = (
+        jnp.moveaxis(z_in, 1, 0),
+        jnp.moveaxis(i_in, 1, 0),
+        jnp.moveaxis(f_in, 1, 0),
+        jnp.moveaxis(o_in, 1, 0),
+    )
+    (c, n, m, h_last), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["m"], state["h"]), seq
+    )
+    ht = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    out = x + layers.apply_mlp(params["ffn"], ht, "swiglu")
+    return out - x, {"c": c, "n": n, "m": m, "h": h_last}

@@ -1,0 +1,2 @@
+from repro.optim import adamw, compression  # noqa: F401
+from repro.optim.adamw import AdamWConfig, OptState  # noqa: F401

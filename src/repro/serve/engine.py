@@ -1,0 +1,129 @@
+"""Batched serving engine: prefill/decode with KV cache, continuous batching,
+and the paper's Bayes decision head for timely-reliable emission.
+
+The engine keeps a fixed pool of ``max_batch`` slots.  Requests are admitted
+into free slots (continuous batching at step granularity); every engine step
+decodes one token for all active slots.  When ``bayes_gate`` is on, per-slot
+emission goes through ``models.bayes_head``: posteriors from the model's decision
+sources (main head + temperature-perturbed ensemble source by default, MTP head
+when the arch has one) are fused with eq (5) and a token is only *committed*
+when fused confidence clears the threshold -- otherwise it is emitted as a
+tentative token and flagged (the serving analogue of the paper's
+"keep lane / change lane" reliability branch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api, bayes_head
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[list] = None
+    confidences: Optional[list] = None
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 4
+    t_cache: int = 128
+    bayes_gate: bool = True
+    confidence_threshold: float = 0.5
+    ensemble_temp: float = 1.3         # second posterior source (perturbed)
+    greedy: bool = True
+
+
+class ServeEngine:
+    def __init__(self, model_cfg, params, engine_cfg: EngineConfig):
+        self.cfg = model_cfg
+        self.params = params
+        self.ecfg = engine_cfg
+        self._decode = jax.jit(
+            lambda tok, state, pos: api.decode(params, model_cfg, tok, state, pos)
+        )
+        self._prefill = jax.jit(
+            lambda batch: api.prefill(params, model_cfg, batch, engine_cfg.t_cache)
+        )
+        self.slots: List[Optional[Request]] = [None] * engine_cfg.max_batch
+        self.state = None
+        self.pos = 0
+
+    # ------------------------------------------------------------- admission
+    def add_requests(self, requests: List[Request]):
+        for r in requests:
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if not free:
+                raise RuntimeError("no free slots (continuous batching full)")
+            r.out_tokens, r.confidences = [], []
+            self.slots[free[0]] = r
+
+    def _batch_prompts(self) -> Dict[str, jnp.ndarray]:
+        lens = [len(s.prompt) for s in self.slots if s is not None]
+        maxlen = max(lens)
+        toks = np.zeros((self.ecfg.max_batch, maxlen), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                toks[i, maxlen - len(s.prompt):] = s.prompt   # left-pad
+        return {"tokens": jnp.asarray(toks)}
+
+    # ---------------------------------------------------------------- serve
+    def prefill_all(self):
+        batch = self._batch_prompts()
+        logits, self.state = self._prefill(batch)
+        self.pos = batch["tokens"].shape[1]
+        return logits
+
+    def step(self, key, last_logits) -> Dict[int, tuple]:
+        """One decode step for all active slots; returns {rid: (token, conf, ok)}."""
+        if self.ecfg.bayes_gate:
+            # two conditionally-independent posterior sources: the head itself
+            # and a temperature-perturbed view (stand-in for MTP/modality heads)
+            sources = jnp.stack(
+                [last_logits, last_logits / self.ecfg.ensemble_temp], axis=0
+            )
+            token, conf, _ = bayes_head.fuse_posteriors(sources, top_k=8)
+            ok, token = bayes_head.reliable_decision(
+                token, conf, self.ecfg.confidence_threshold
+            )
+        else:
+            token = jnp.argmax(last_logits, axis=-1)
+            conf = jax.nn.softmax(last_logits, -1).max(-1)
+            ok = jnp.ones_like(token, bool)
+        logits, self.state = self._decode(token, self.state, jnp.int32(self.pos))
+        self.pos += 1
+
+        out = {}
+        tok_np, conf_np, ok_np = np.asarray(token), np.asarray(conf), np.asarray(ok)
+        for i, s in enumerate(self.slots):
+            if s is None or s.done:
+                continue
+            s.out_tokens.append(int(tok_np[i]))
+            s.confidences.append(float(conf_np[i]))
+            out[s.rid] = (int(tok_np[i]), float(conf_np[i]), bool(ok_np[i]))
+            if len(s.out_tokens) >= s.max_new_tokens:
+                s.done = True
+                self.slots[i] = None     # free the slot (continuous batching)
+        return logits, out
+
+    def run(self, key, requests: List[Request], max_steps: int | None = None):
+        """Convenience driver: admit, prefill, decode until all done."""
+        self.add_requests(requests)
+        logits = self.prefill_all()
+        steps = max_steps or max(r.max_new_tokens for r in requests)
+        for t in range(steps):
+            key, sub = jax.random.split(key)
+            logits, _ = self.step(sub, logits)
+            if all(s is None for s in self.slots):
+                break
+        return requests

@@ -1,0 +1,126 @@
+"""Training loop: microbatched grad accumulation, sharded AdamW, fault hooks.
+
+``make_train_step`` builds the jitted step (optionally under a mesh with full
+FSDP/TP shardings); ``TrainLoop`` drives data, checkpointing, preemption,
+straggler watch and loss-spike rewind.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.data.pipeline import DataConfig, batch_at_step
+from repro.distributed import fault, sharding
+from repro.models import api
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1            # grad-accumulation factor
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    remat: bool = True
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_of(params, batch):
+        return api.loss(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:]),
+                batch,
+            )
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+        new_params, new_opt, om = adamw.apply(grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+class TrainLoop:
+    """Single-host driver with the full fault-tolerance surface."""
+
+    def __init__(
+        self,
+        model_cfg,
+        data_cfg: DataConfig,
+        train_cfg: TrainConfig,
+        opt_cfg: adamw.AdamWConfig | None = None,
+        mesh=None,
+    ):
+        self.model_cfg = model_cfg
+        self.data_cfg = data_cfg
+        self.train_cfg = train_cfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(total_steps=train_cfg.steps)
+        self.mesh = mesh
+        self.ckpt = Checkpointer(train_cfg.ckpt_dir)
+        self.guard = fault.PreemptionGuard(install=False)
+        self.straggler = fault.StragglerWatch()
+        self.spike = fault.SpikeRewind()
+        self.history: list[Dict[str, float]] = []
+
+    def init_state(self, key):
+        params = api.init(self.model_cfg, key)
+        opt_state = adamw.init(params)
+        return params, opt_state
+
+    def run(self, key, start_step: int = 0, params=None, opt_state=None):
+        if params is None:
+            params, opt_state = self.init_state(key)
+        step_fn = jax.jit(
+            make_train_step(self.model_cfg, self.opt_cfg, self.train_cfg.microbatches)
+        )
+        step = start_step
+        # resume from the latest committed checkpoint if present
+        latest = self.ckpt.latest_step()
+        if latest is not None and latest > start_step:
+            latest, (params, opt_state) = self.ckpt.restore((params, opt_state), latest)
+            step = latest
+
+        while step < self.train_cfg.steps:
+            self.straggler.step_start()
+            batch = batch_at_step(self.data_cfg, step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            self.straggler.step_end(step)
+            self.history.append({"step": step, "loss": loss})
+
+            if self.spike.observe(loss):
+                # divergence: rewind to last committed checkpoint
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    latest, (params, opt_state) = self.ckpt.restore((params, opt_state))
+                    step = latest
+                    continue
+            step += 1
+            if step % self.train_cfg.ckpt_every == 0 or self.guard.requested:
+                self.ckpt.save(step, (params, opt_state))
+            if self.guard.requested:
+                self.ckpt.wait()
+                break
+        self.ckpt.wait()
+        return params, opt_state, self.history

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override is ONLY for
+# repro.launch.dryrun, which sets XLA_FLAGS before importing jax in its own
+# process).  Keep compilation single-threaded-ish and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,61 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitops
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 100, 256, 1000])
+def test_pack_unpack_roundtrip(n):
+    key = jax.random.PRNGKey(n)
+    bits = jax.random.bernoulli(key, 0.5, (3, n)).astype(jnp.uint8)
+    words = bitops.pack_bits(bits)
+    assert words.shape == (3, bitops.n_words(n))
+    out = bitops.unpack_bits(words, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(bits))
+
+
+@pytest.mark.parametrize("n", [1, 32, 100, 513])
+def test_popcount_matches_sum(n):
+    key = jax.random.PRNGKey(n + 7)
+    bits = jax.random.bernoulli(key, 0.3, (5, n)).astype(jnp.uint8)
+    words = bitops.pack_bits(bits)
+    np.testing.assert_array_equal(
+        np.asarray(bitops.popcount(words)), np.asarray(bits.sum(-1, dtype=jnp.int32))
+    )
+
+
+def test_decode_range():
+    words = bitops.pack_bits(jnp.ones((100,), jnp.uint8))
+    assert float(bitops.decode(words, 100)) == 1.0
+    words0 = bitops.pack_bits(jnp.zeros((100,), jnp.uint8))
+    assert float(bitops.decode(words0, 100)) == 0.0
+
+
+@given(n=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_bnot_property(n, seed):
+    key = jax.random.PRNGKey(seed)
+    bits = jax.random.bernoulli(key, 0.5, (n,)).astype(jnp.uint8)
+    w = bitops.pack_bits(bits)
+    nw = bitops.bnot(w, n)
+    # NOT flips exactly the valid bits, padding stays zero.
+    assert int(bitops.popcount(nw)) == n - int(bitops.popcount(w))
+    np.testing.assert_array_equal(
+        np.asarray(bitops.unpack_bits(nw, n)), 1 - np.asarray(bits)
+    )
+
+
+def test_mux_bit_semantics():
+    n = 64
+    key = jax.random.PRNGKey(0)
+    ks, ka, kb = jax.random.split(key, 3)
+    s = jax.random.bernoulli(ks, 0.5, (n,)).astype(jnp.uint8)
+    a = jax.random.bernoulli(ka, 0.5, (n,)).astype(jnp.uint8)
+    b = jax.random.bernoulli(kb, 0.5, (n,)).astype(jnp.uint8)
+    out = bitops.bmux(bitops.pack_bits(s), bitops.pack_bits(a), bitops.pack_bits(b))
+    expect = np.where(np.asarray(s) == 1, np.asarray(b), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(bitops.unpack_bits(out, n)), expect)

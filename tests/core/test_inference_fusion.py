@@ -1,0 +1,155 @@
+"""Bayesian inference & fusion operators vs the paper's equations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitops, cordiv, correlation, fusion, graph, inference
+
+N_BITS = 1 << 14
+TOL = 0.03
+
+
+def test_cordiv_scan_equals_ratio_on_subset():
+    key = jax.random.PRNGKey(0)
+    from repro.core import sne
+
+    kd, extra = jax.random.split(key)
+    d = sne.encode_uncorrelated(kd, 0.7, N_BITS)
+    n = d & sne.encode_uncorrelated(extra, 0.6, N_BITS)  # n subset of d
+    _, est_scan = cordiv.cordiv_scan(n, d, N_BITS)
+    est_ratio = cordiv.cordiv_ratio(n, d)
+    assert abs(float(est_scan) - float(est_ratio)) < TOL
+    assert abs(float(est_ratio) - 0.6) < TOL
+
+
+def test_make_superset():
+    key = jax.random.PRNGKey(5)
+    from repro.core import sne
+
+    k1, k2 = jax.random.split(key)
+    n = sne.encode_uncorrelated(k1, 0.3, N_BITS)
+    d = cordiv.make_superset(k2, n, 0.3, 0.8, N_BITS)
+    assert int(bitops.popcount(n & ~d)) == 0  # subset holds bitwise
+    assert abs(float(bitops.decode(d, N_BITS)) - 0.8) < TOL
+
+
+@pytest.mark.parametrize(
+    "pa,pba,pbn",
+    [(0.57, 0.72, 0.6), (0.2, 0.9, 0.1), (0.8, 0.5, 0.5), (0.5, 0.99, 0.01)],
+)
+def test_inference_operator_matches_eq1(pa, pba, pbn):
+    key = jax.random.PRNGKey(hash((pa, pba, pbn)) % (2**31))
+    tr = inference.bayes_inference(key, pa, pba, pbn, n_bits=N_BITS)
+    expect = float(inference.analytic_posterior(pa, pba, pbn))
+    assert abs(float(tr.posterior_ratio) - expect) < TOL
+    assert abs(float(tr.posterior_scan) - expect) < 2 * TOL
+    # numerator is a bitwise subset of the denominator (CORDIV requirement)
+    assert int(bitops.popcount(tr.streams["numer"] & ~tr.streams["denom"])) == 0
+
+
+def test_route_planning_case_paper_band():
+    """Fig 3b: P(A)=57%, evidence ~72% -> posterior in the paper's 61-63% band."""
+    key = jax.random.PRNGKey(2024)
+    tr = inference.bayes_inference(key, 0.57, 0.72, 0.6, n_bits=N_BITS)
+    assert 0.58 < float(tr.posterior_ratio) < 0.66
+    assert float(tr.posterior_ratio) > 0.57  # belief increased -> cut in
+
+
+def test_inference_marginal_variant():
+    key = jax.random.PRNGKey(11)
+    tr = inference.bayes_inference_marginal(key, 0.57, 0.78, 0.72, n_bits=N_BITS)
+    expect = 0.57 * 0.78 / 0.72
+    assert abs(float(tr.posterior_ratio) - expect) < TOL
+
+
+def test_operator_correlation_design():
+    """Fig 3c/3d: the SNE streams feeding AND/MUX are mutually uncorrelated."""
+    key = jax.random.PRNGKey(9)
+    tr = inference.bayes_inference(key, 0.57, 0.72, 0.6, n_bits=N_BITS)
+    s = tr.streams
+    for x, y in [("A", "B|A"), ("A", "B|!A"), ("B|A", "B|!A")]:
+        assert abs(float(correlation.pearson(s[x], s[y], N_BITS))) < 0.05
+    # numerator strongly positively correlated with denominator (shared SNEs)
+    assert float(correlation.scc(s["numer"], s["denom"], N_BITS)) > 0.9
+
+
+@given(
+    pa1=st.floats(0.05, 0.95),
+    pa2=st.floats(0.05, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_two_parent_property(pa1, pa2, seed):
+    cpt = jnp.array([[0.1, 0.4], [0.6, 0.9]])
+    post_scan, post_ratio, analytic = graph.two_parent_one_child(
+        jax.random.PRNGKey(seed), pa1, pa2, cpt, n_bits=N_BITS
+    )
+    assert abs(float(post_ratio) - float(analytic)) < 0.06
+    assert 0.0 <= float(post_ratio) <= 1.0
+
+
+def test_one_parent_two_child():
+    post_scan, post_ratio, analytic = graph.one_parent_two_child(
+        jax.random.PRNGKey(1), 0.5, (0.9, 0.2), (0.8, 0.3), n_bits=N_BITS
+    )
+    assert abs(float(post_ratio) - float(analytic)) < TOL
+    assert abs(float(post_scan) - float(analytic)) < 2 * TOL
+
+
+# ---- fusion ----------------------------------------------------------------------
+
+def test_fusion_matches_eq5_binary():
+    key = jax.random.PRNGKey(3)
+    p_modal = jnp.array([[0.8, 0.2], [0.7, 0.3]])  # (M=2, K=2)
+    tr = fusion.bayes_fusion(key, p_modal, n_bits=N_BITS)
+    np.testing.assert_allclose(
+        np.asarray(tr.fused_ratio), np.asarray(tr.fused_analytic), atol=0.04
+    )
+    np.testing.assert_allclose(
+        np.asarray(tr.fused_scan), np.asarray(tr.fused_analytic), atol=0.08
+    )
+
+
+@given(
+    m=st.integers(2, 4),
+    k=st.integers(2, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_fusion_property(m, k, seed):
+    key = jax.random.PRNGKey(seed)
+    kp, kf = jax.random.split(key)
+    logits = jax.random.normal(kp, (m, k))
+    p_modal = jax.nn.softmax(logits, axis=-1) * 0.9 + 0.05  # keep away from 0/1
+    p_modal = p_modal / p_modal.sum(-1, keepdims=True)
+    tr = fusion.bayes_fusion(kf, p_modal, n_bits=N_BITS)
+    # normalized outputs sum to 1 and match eq (5); the AND-count estimator
+    # variance grows with M (products of M probabilities get tiny), so the
+    # stochastic tolerance scales with the modality count
+    assert abs(float(tr.fused_ratio.sum()) - 1.0) < 1e-5
+    np.testing.assert_allclose(
+        np.asarray(tr.fused_ratio), np.asarray(tr.fused_analytic), atol=0.04 * m
+    )
+
+
+def test_fusion_recovers_missed_target():
+    """Fig 4b behaviour: one weak + one confident modality -> confident fusion."""
+    key = jax.random.PRNGKey(8)
+    fused = fusion.detection_fusion(key, jnp.array([0.55, 0.95]), n_bits=N_BITS)
+    assert float(fused) > 0.9  # more confident than either alone... (0.95 check below)
+    analytic = fusion.fuse_analytic(
+        jnp.array([[0.55, 0.45], [0.95, 0.05]])
+    )[0]
+    assert abs(float(fused) - float(analytic)) < 0.05
+
+
+def test_fusion_m_greater_than_2():
+    p_modal = jnp.array([[0.7, 0.3], [0.8, 0.2], [0.6, 0.4]])
+    out = fusion.fuse_analytic(p_modal)
+    # eq (5): q_c  prop  prod p_ic / prior^(M-1)
+    q = np.prod(np.asarray(p_modal), axis=0) / (0.5 ** 2)
+    np.testing.assert_allclose(np.asarray(out), q / q.sum(), rtol=1e-5)

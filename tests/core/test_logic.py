@@ -1,0 +1,106 @@
+"""Table S1: all logic x correlation cells, statistical vs analytic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitops, correlation, logic
+from repro.core.logic import Corr
+
+N_BITS = 1 << 14  # 16384 bits -> stochastic std <= 0.5/128 ~ 0.004
+TOL = 0.03        # ~7 sigma
+
+
+PROBS = [(0.2, 0.7), (0.5, 0.5), (0.9, 0.3), (0.05, 0.95)]
+MODES = [Corr.UNCORRELATED, Corr.POSITIVE, Corr.NEGATIVE]
+
+
+@pytest.mark.parametrize("pa,pb", PROBS)
+@pytest.mark.parametrize("mode", MODES)
+def test_and_all_modes(pa, pb, mode):
+    key = jax.random.PRNGKey(hash((pa, pb, mode.value)) % (2**31))
+    _, est, _ = logic.prob_and(key, pa, pb, N_BITS, mode)
+    expect = float(logic.expected_and(pa, pb, mode))
+    assert abs(float(est) - expect) < TOL
+
+
+@pytest.mark.parametrize("pa,pb", PROBS)
+@pytest.mark.parametrize("mode", MODES)
+def test_or_all_modes(pa, pb, mode):
+    key = jax.random.PRNGKey(hash(("or", pa, pb, mode.value)) % (2**31))
+    _, est, _ = logic.prob_or(key, pa, pb, N_BITS, mode)
+    assert abs(float(est) - float(logic.expected_or(pa, pb, mode))) < TOL
+
+
+@pytest.mark.parametrize("pa,pb", PROBS)
+@pytest.mark.parametrize("mode", MODES)
+def test_xor_all_modes(pa, pb, mode):
+    key = jax.random.PRNGKey(hash(("xor", pa, pb, mode.value)) % (2**31))
+    _, est, _ = logic.prob_xor(key, pa, pb, N_BITS, mode)
+    assert abs(float(est) - float(logic.expected_xor(pa, pb, mode))) < TOL
+
+
+@pytest.mark.parametrize("ps,pa,pb", [(0.5, 0.2, 0.8), (0.3, 0.9, 0.1), (0.72, 0.57, 0.4)])
+@pytest.mark.parametrize("mode_inputs", MODES)
+def test_mux_weighted_addition(ps, pa, pb, mode_inputs):
+    key = jax.random.PRNGKey(hash(("mux", ps, pa, pb, mode_inputs.value)) % (2**31))
+    _, est, _ = logic.prob_mux(key, ps, pa, pb, N_BITS, mode_inputs)
+    assert abs(float(est) - float(logic.expected_mux(ps, pa, pb))) < TOL
+
+
+def test_mux_corrupted_by_correlated_select():
+    """Fig S6b counter-example: select positively correlated with input b."""
+    from repro.core import sne
+
+    key = jax.random.PRNGKey(42)
+    ps, pa, pb = 0.5, 0.1, 0.5
+    ka, kc = jax.random.split(key)
+    # select shares entropy with b -> corrupted
+    both = sne.encode_correlated(kc, jnp.array([ps, pb]), N_BITS)
+    s, b = both[0], both[1]
+    a = sne.encode_uncorrelated(ka, jnp.float32(pa), N_BITS)
+    est = float(bitops.decode(bitops.bmux(s, a, b), N_BITS))
+    good = float(logic.expected_mux(ps, pa, pb))
+    assert abs(est - good) > 0.1  # visibly corrupted
+
+
+@given(
+    pa=st.floats(0.02, 0.98),
+    pb=st.floats(0.02, 0.98),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_property_and_uncorrelated(pa, pb, seed):
+    key = jax.random.PRNGKey(seed)
+    _, est, (a, b) = logic.prob_and(key, pa, pb, N_BITS, Corr.UNCORRELATED)
+    assert abs(float(est) - pa * pb) < 0.05
+    # streams decode to their programmed probabilities
+    assert abs(float(bitops.decode(a, N_BITS)) - pa) < 0.05
+    assert abs(float(bitops.decode(b, N_BITS)) - pb) < 0.05
+
+
+def test_correlation_modes_measured():
+    """Encoded pairs exhibit the designed Pearson/SCC signs (Fig 3c/3d style)."""
+    key = jax.random.PRNGKey(7)
+    pa, pb = 0.6, 0.6
+    a, b = logic.encode_pair(key, pa, pb, N_BITS, Corr.POSITIVE)
+    assert float(correlation.scc(a, b, N_BITS)) > 0.9
+    a, b = logic.encode_pair(key, pa, pb, N_BITS, Corr.NEGATIVE)
+    assert float(correlation.scc(a, b, N_BITS)) < -0.9
+    a, b = logic.encode_pair(key, pa, pb, N_BITS, Corr.UNCORRELATED)
+    assert abs(float(correlation.pearson(a, b, N_BITS))) < 0.05
+
+
+def test_mux_tree_mean():
+    key = jax.random.PRNGKey(3)
+    from repro.core import sne
+
+    ps = jnp.array([0.1, 0.5, 0.9])
+    streams = sne.encode_uncorrelated(key, ps, N_BITS)
+    out, k_pad = logic.mux_tree(jax.random.PRNGKey(4), streams, N_BITS)
+    assert k_pad == 4
+    est = float(bitops.decode(out, N_BITS))
+    assert abs(est - float(ps.sum()) / 4) < TOL

@@ -1,0 +1,80 @@
+"""Extra algebraic property tests on packed stochastic numbers (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitops, sne
+from repro.core.fusion import fuse_analytic
+
+N = 1 << 12
+
+
+@given(seed=st.integers(0, 2**31 - 1), p=st.floats(0.05, 0.95), q=st.floats(0.05, 0.95))
+@settings(max_examples=15, deadline=None)
+def test_de_morgan_on_streams(seed, p, q):
+    """NOT(a AND b) == NOT(a) OR NOT(b) bitwise on packed streams."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = sne.encode_uncorrelated(k1, p, N)
+    b = sne.encode_uncorrelated(k2, q, N)
+    lhs = bitops.bnot(bitops.band(a, b), N)
+    rhs = bitops.bor(bitops.bnot(a, N), bitops.bnot(b, N))
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@given(seed=st.integers(0, 2**31 - 1), p=st.floats(0.02, 0.98))
+@settings(max_examples=15, deadline=None)
+def test_xor_with_self_and_complement(seed, p):
+    """a XOR a == 0; a XOR NOT(a) == all ones (on valid bits)."""
+    a = sne.encode_uncorrelated(jax.random.PRNGKey(seed), p, N)
+    assert int(bitops.popcount(bitops.bxor(a, a))) == 0
+    x = bitops.bxor(a, bitops.bnot(a, N))
+    assert int(bitops.popcount(x)) == N
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_mux_select_partition(seed):
+    """MUX output bits partition between inputs: popcounts add up exactly."""
+    ks, ka, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s = sne.encode_uncorrelated(ks, 0.5, N)
+    a = sne.encode_uncorrelated(ka, 0.7, N)
+    b = sne.encode_uncorrelated(kb, 0.3, N)
+    out = bitops.bmux(s, a, b)
+    take_b = bitops.popcount(s & b)
+    take_a = bitops.popcount(bitops.bnot(s, N) & a)
+    assert int(bitops.popcount(out)) == int(take_a) + int(take_b)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(2, 4),
+    k=st.integers(2, 6),
+)
+@settings(max_examples=15, deadline=None)
+def test_fusion_analytic_invariants(seed, m, k):
+    """eq (5): permutation-equivariant over modalities; sharper than any input
+    on the argmax class when all modalities agree."""
+    key = jax.random.PRNGKey(seed)
+    p = jax.nn.softmax(jax.random.normal(key, (m, k)), -1)
+    out = fuse_analytic(p)                                # (m, k) -> (k,)
+    out_perm = fuse_analytic(p[::-1])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_perm), rtol=1e-5)
+    assert abs(float(out.sum()) - 1.0) < 1e-5
+    # agreement sharpening: fuse identical posteriors -> argmax prob increases
+    same = jnp.stack([p[0]] * m)
+    fused_same = fuse_analytic(same)
+    assert float(fused_same.max()) >= float(p[0].max()) - 1e-6
+
+
+def test_cordiv_range_bounded():
+    """CORDIV estimates stay in [0, 1] even on adversarial (empty) inputs."""
+    from repro.core import cordiv
+
+    zeros = jnp.zeros((4,), jnp.uint32)
+    est = cordiv.cordiv_ratio(zeros, zeros)
+    assert float(est) == 0.0
+    _, est_scan = cordiv.cordiv_scan(zeros, zeros, 128)
+    assert 0.0 <= float(est_scan) <= 1.0

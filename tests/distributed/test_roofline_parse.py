@@ -1,0 +1,55 @@
+"""Unit tests for the roofline HLO-text collective parser."""
+
+from repro.launch import roofline as rf
+
+HLO = """
+HloModule jit_train_step
+
+%fused (x: bf16[16,4096,8192]) -> bf16[16,4096,8192] {
+  %ag = bf16[16,4096,8192]{2,1,0} all-gather(%p0), replica_groups={{0,1}}
+  %ar.1 = f32[1024,512]{1,0} all-reduce(%x1), to_apply=%add
+  %ars = f32[1024,512]{1,0} all-reduce-start(%x2), to_apply=%add
+  %ard = f32[1024,512]{1,0} all-reduce-done(%ars)
+  %rs = bf16[8,128]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = s32[64]{0} all-to-all(%z), dimensions={0}
+  %cp = u32[32,4]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %tup = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-reduce(%a, %b), to_apply=%add
+}
+"""
+
+
+def test_shape_bytes():
+    assert rf._shape_bytes("bf16[16,4096,8192]{2,1,0}") == 16 * 4096 * 8192 * 2
+    assert rf._shape_bytes("f32[1024,512]") == 1024 * 512 * 4
+    assert rf._shape_bytes("(f32[2,2], f32[2,2])") == 2 * (2 * 2 * 4)
+    assert rf._shape_bytes("pred[7]") == 7
+
+
+def test_collective_bytes_and_counts():
+    total, by_kind = rf.collective_bytes(HLO)
+    counts = rf.collective_counts(HLO)
+    # all-reduce counted 2x (ring), -done not double counted
+    ar = 2 * (1024 * 512 * 4)          # %ar.1
+    ars = 2 * (1024 * 512 * 4)         # %ars (start only)
+    tup = 2 * 2 * (2 * 2 * 4)          # tuple all-reduce
+    assert by_kind["all-reduce"] == ar + ars + tup
+    assert by_kind["all-gather"] == 16 * 4096 * 8192 * 2
+    assert by_kind["reduce-scatter"] == 8 * 128 * 2
+    assert by_kind["all-to-all"] == 64 * 4
+    assert by_kind["collective-permute"] == 32 * 4 * 4
+    assert total == sum(by_kind.values())
+    assert counts["all-reduce"] == 3 and counts["all-gather"] == 1
+
+
+def test_roofline_terms():
+    r = rf.Roofline(
+        arch="x", shape="train_4k", mesh="pod16x16", chips=256,
+        flops_per_chip=197e12, bytes_per_chip=819e9,
+        collective_bytes_per_chip=50e9, collective_by_kind={},
+        model_flops_total=197e12 * 256 / 2,
+    ).finalize()
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert r.useful_ratio == 0.5
+    assert r.bottleneck in ("compute", "memory", "collective")

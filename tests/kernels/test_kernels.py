@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp ref oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitops
+from repro.kernels.fusion_map.kernel import fusion_map_pallas
+from repro.kernels.fusion_map.ops import fusion_map
+from repro.kernels.fusion_map.ref import fusion_map_ref
+from repro.kernels.pand_popcount.kernel import pand_popcount_pallas
+from repro.kernels.pand_popcount.ops import pand_popcount
+from repro.kernels.pand_popcount.ref import pand_popcount_ref
+from repro.kernels.sne_encode.kernel import sne_encode_pallas
+from repro.kernels.sne_encode.ops import sne_encode
+from repro.kernels.sne_encode.ref import sne_encode_ref
+
+
+# --- sne_encode -------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,n_rand,block", [(64, 32, 64), (256, 64, 64), (512, 256, 256), (1, 8, 1)])
+def test_sne_encode_kernel_vs_ref(rows, n_rand, block):
+    kp, kr = jax.random.split(jax.random.PRNGKey(rows * 7 + n_rand))
+    p = jax.random.uniform(kp, (rows,), jnp.float32)
+    rand = jax.random.bits(kr, (rows, n_rand), jnp.uint32)
+    out_k = sne_encode_pallas(p, rand, block_r=block, interpret=True)
+    out_r = sne_encode_ref(p, rand)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_sne_encode_op_probability():
+    n_bits = 4096
+    p = jnp.linspace(0.05, 0.95, 64)
+    words = sne_encode(jax.random.PRNGKey(0), p, n_bits)
+    est = np.asarray(bitops.decode(words, n_bits))
+    np.testing.assert_allclose(est, np.asarray(p), atol=0.04)
+
+
+def test_sne_encode_op_matches_ref_path():
+    p = jax.random.uniform(jax.random.PRNGKey(3), (128,), jnp.float32)
+    a = sne_encode(jax.random.PRNGKey(1), p, 256, use_kernel=True)
+    b = sne_encode(jax.random.PRNGKey(1), p, 256, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- pand_popcount ----------------------------------------------------------------
+
+@pytest.mark.parametrize("m,rows,n_words,block", [(2, 64, 4, 64), (3, 512, 8, 512), (4, 128, 32, 64), (2, 1, 1, 1)])
+def test_pand_popcount_kernel_vs_ref(m, rows, n_words, block):
+    streams = jax.random.bits(
+        jax.random.PRNGKey(m * 100 + rows), (m, rows, n_words), jnp.uint32
+    )
+    out_k = pand_popcount_pallas(streams, block_r=block, interpret=True)
+    out_r = pand_popcount_ref(streams)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_pand_popcount_semantics():
+    """Fused kernel == decode(AND of streams) * n_bits."""
+    n_bits = 512
+    key = jax.random.PRNGKey(5)
+    from repro.core import sne as core_sne
+
+    ps = jnp.array([[0.8], [0.7]])
+    streams = core_sne.encode_uncorrelated(key, ps, n_bits)  # (2, 1, n_words)
+    counts = pand_popcount(streams)
+    expect = bitops.popcount(streams[0, 0] & streams[1, 0])
+    assert int(counts[0]) == int(expect)
+
+
+# --- fusion_map -------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,rows,k,block", [(2, 64, 2, 64), (2, 256, 16, 256), (3, 512, 128, 256), (4, 1, 8, 1)])
+def test_fusion_map_kernel_vs_ref(m, rows, k, block):
+    kp = jax.random.PRNGKey(m * 31 + k)
+    p = jax.nn.softmax(jax.random.normal(kp, (m, rows, k)), axis=-1)
+    prior = jnp.full((k,), 1.0 / k, jnp.float32)
+    out_k = fusion_map_pallas(p, prior, block_r=block, interpret=True)
+    out_r = fusion_map_ref(p, prior)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-6)
+
+
+def test_fusion_map_matches_core_analytic():
+    from repro.core import fusion as core_fusion
+
+    p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(9), (3, 40, 5)), -1)
+    out = fusion_map(p)                               # (40, 5)
+    expect = core_fusion.fuse_analytic(jnp.moveaxis(p, 0, -2))  # (40, 5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-5)
+
+
+def test_fusion_map_nonuniform_prior():
+    p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(4), (2, 64, 4)), -1)
+    prior = jnp.array([0.6, 0.2, 0.1, 0.1])
+    out = fusion_map(p, prior)
+    ref = fusion_map_ref(p.reshape(2, -1, 4), prior)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, rtol=1e-5)
+
+
+# --- end-to-end stochastic fusion through kernels ---------------------------------
+
+def test_kernel_pipeline_matches_core_fusion():
+    """sne_encode -> pand_popcount reproduces core.bayes_fusion's ratio path."""
+    n_bits = 1 << 13
+    p_modal = jnp.array([[0.8, 0.2], [0.7, 0.3]])  # (M, K)
+    streams = sne_encode(jax.random.PRNGKey(7), p_modal, n_bits)  # (M, K, W)
+    counts = pand_popcount(streams).astype(jnp.float32)           # (K,)
+    fused = counts / counts.sum()
+    from repro.core import fusion as core_fusion
+
+    expect = core_fusion.fuse_analytic(jnp.moveaxis(p_modal, 0, -2))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(expect), atol=0.05)

@@ -1,0 +1,42 @@
+"""DeepSeek MTP-head × main-head Bayesian fusion (DESIGN.md §4, the closest LM
+analogue of the paper's RGB+thermal fusion)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import api, bayes_head, layers, transformer
+
+
+def test_mtp_head_as_second_posterior_source():
+    """Fuse main-head and MTP-head posteriors of the SAME next token (eq 4)."""
+    cfg = get_smoke_config("deepseek-v3-671b")
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+
+    # main head posterior for token t+1 given prefix ..t: forward logits at t
+    h, _ = transformer.forward(params, cfg, tokens, return_hidden=True)
+    unembed = params["unembed"]
+    main_logits = (h[:, -2] @ unembed).astype(jnp.float32)       # predicts t_last
+
+    # MTP head predicts t+2 from [h_t ; emb(t+1)]: use position -3 so it also
+    # predicts the final token -> two conditionally-independent posteriors of
+    # the same event, exactly the paper's eq (4) setting
+    emb_next = params["embed"][tokens[:, -2]]
+    hcat = jnp.concatenate([h[:, -3], emb_next], axis=-1)
+    h2 = (hcat @ params["mtp"]["proj"])[:, None, :]
+    h2, _, _ = transformer.block_apply(
+        params["mtp"]["block"], h2, cfg, cfg.pattern[0], positions=jnp.arange(1)
+    )
+    h2 = layers.apply_norm(params["mtp"]["norm"], h2, cfg.norm)
+    mtp_logits = (h2[:, 0] @ unembed).astype(jnp.float32)
+
+    sources = jnp.stack([main_logits, mtp_logits])
+    token, conf, fused = bayes_head.fuse_posteriors(sources, top_k=8)
+    assert token.shape == (2,)
+    assert np.all(np.asarray(conf) >= 0) and np.all(np.asarray(conf) <= 1)
+    np.testing.assert_allclose(np.asarray(fused.sum(-1)), 1.0, rtol=1e-5)
+    # gating returns a boolean decision per sequence
+    ok, _ = bayes_head.reliable_decision(token, conf, threshold=0.2)
+    assert ok.shape == (2,)

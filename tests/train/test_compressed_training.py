@@ -1,0 +1,45 @@
+"""End-to-end: training with int8 stochastic-number gradient compression (the
+beyond-paper cross-pod path) converges like the uncompressed loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, batch_at_step
+from repro.models import api
+from repro.optim import adamw, compression
+
+
+def test_compressed_grads_converge():
+    cfg = get_smoke_config("qwen2-72b")
+    data_cfg = DataConfig(seed=3, global_batch=8, seq_len=32, vocab_size=cfg.vocab_size)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=20)
+
+    def run(compressed: bool):
+        params = api.init(cfg, jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        residual = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        losses = []
+        for step in range(20):
+            batch = batch_at_step(data_cfg, step)
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: api.loss(p, cfg, batch), has_aux=True
+            )(params)
+            if compressed:
+                # simulate the cross-pod path: encode int8 + error feedback,
+                # decode (the all-reduce mean of identical replicas = identity)
+                q, s, residual = compression.compress(
+                    jax.random.fold_in(jax.random.PRNGKey(9), step), grads, residual
+                )
+                grads = compression.decompress(q, s)
+            params, opt, _ = adamw.apply(grads, opt, opt_cfg)
+            losses.append(float(loss))
+        return losses
+
+    base = run(False)
+    comp = run(True)
+    # both decrease, and compressed tracks uncompressed closely
+    assert base[-1] < base[0] - 0.3
+    assert comp[-1] < comp[0] - 0.3
+    assert abs(comp[-1] - base[-1]) < 0.35, (base[-1], comp[-1])

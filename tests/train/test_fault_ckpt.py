@@ -1,0 +1,106 @@
+"""Fault-tolerance mechanisms + checkpoint semantics."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.distributed import fault
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": jnp.arange(10, dtype=jnp.float32), "b": {"c": jnp.ones((3, 4))}}
+    ck.save(5, tree, blocking=True)
+    step, restored = ck.restore(tree)
+    assert step == 5
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_atomic_commit_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree, blocking=True)
+    assert ck.available_steps() == [3, 4]       # gc keeps last 2
+    # a partial (uncommitted) checkpoint is invisible
+    (tmp_path / "step_9").mkdir()
+    (tmp_path / "step_9" / "shard_0.npz").write_bytes(b"junk")
+    assert 9 not in ck.available_steps()
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"x": jnp.arange(1000, dtype=jnp.float32)}
+    ck.save(1, tree, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.zeros((4,))}, blocking=True)
+    with pytest.raises(ValueError):
+        ck.restore({"x": jnp.zeros((5,))})
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore re-places arrays under new shardings (mesh change simulated)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ck.save(1, tree, blocking=True)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    shardings = {"w": NamedSharding(mesh, P("data", None))}
+    _, restored = ck.restore(tree, shardings=shardings)
+    assert restored["w"].sharding == shardings["w"]
+
+
+def test_straggler_watch():
+    watch = fault.StragglerWatch(threshold=3.0)
+    for step in range(10):
+        assert not watch.observe(step, 0.1)
+    assert watch.observe(10, 1.0)          # 10x slower -> flagged
+    assert watch.flagged_steps == [10]
+    assert not watch.observe(11, 0.1)      # recovery
+
+
+def test_spike_rewind():
+    guard = fault.SpikeRewind(factor=3.0, patience=2)
+    assert not guard.observe(2.0)
+    assert not guard.observe(2.1)
+    assert not guard.observe(9.0)          # first spike: patience
+    assert guard.observe(9.5)              # second consecutive -> rewind
+    assert not guard.observe(2.0)          # reset after rewind
+
+
+def test_preemption_guard_flag():
+    g = fault.PreemptionGuard(install=False)
+    assert not g.requested
+    g._handler(None, None)
+    assert g.requested
+
+
+def test_compression_error_feedback():
+    """int8 stochastic compression: unbiased, error feedback shrinks residual."""
+    from repro.optim import compression
+
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (256, 64)) * 0.01}
+    # unbiasedness: mean of many stochastic encodings ~ g
+    acc = jnp.zeros_like(g["w"])
+    n = 30
+    for i in range(n):
+        q, s, _ = compression.compress(jax.random.fold_in(key, i), g)
+        acc = acc + compression.decompress(q, s)["w"]
+    np.testing.assert_allclose(
+        np.asarray(acc / n), np.asarray(g["w"]), atol=2e-4
+    )
+    # single-shot error bounded by one quantisation step
+    q, s, res = compression.compress(key, g)
+    assert float(jnp.max(jnp.abs(res["w"]))) <= float(s["w"]) + 1e-7
