@@ -1,7 +1,11 @@
-"""Shared benchmark helpers: timing + CSV emission (name,us_per_call,derived)."""
+"""Shared benchmark helpers: timing + CSV emission (name,us_per_call,derived)
+plus machine-readable JSON snapshots (BENCH_<timestamp>.json) for the perf
+trajectory."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -28,3 +32,27 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
 def emit(name: str, us_per_call: float, derived: str):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def write_json(out_dir: str = ".") -> str:
+    """Snapshot all emitted rows to BENCH_<timestamp>.json; returns the path.
+
+    Schema: {name: {"us_per_call": float, "derived": str}} plus a "_meta"
+    record (timestamp, jax backend/version) so runs are comparable across the
+    perf trajectory.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    stamp = time.strftime("%Y%m%d_%H%M%S")
+    path = os.path.join(out_dir, f"BENCH_{stamp}.json")
+    payload = {
+        "_meta": {
+            "timestamp": stamp,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+        }
+    }
+    for name, us, derived in ROWS:
+        payload[name] = {"us_per_call": us, "derived": derived}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path

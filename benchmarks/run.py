@@ -1,6 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
+writes a machine-readable ``BENCH_<timestamp>.json`` snapshot of the same rows
+so the perf trajectory accumulates one artifact per run.
 """
 
 from __future__ import annotations
@@ -17,8 +19,10 @@ def main() -> None:
         bench_latency,
         bench_roofline,
         bench_table_s1,
+        common,
     )
 
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "."
     print("name,us_per_call,derived")
     for mod in (
         bench_fig1_device,
@@ -31,6 +35,8 @@ def main() -> None:
     ):
         print(f"# --- {mod.__name__} ---")
         mod.run()
+    path = common.write_json(out_dir)
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

@@ -9,9 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import detection
+from repro.kernels.bayes_decide.ops import bayes_decide
 from repro.kernels.fusion_map.ops import fusion_map
-from repro.kernels.pand_popcount.ops import pand_popcount
-from repro.kernels.sne_encode.ops import sne_encode
 
 key = jax.random.PRNGKey(0)
 cfg = detection.SceneConfig(height=64, width=64, night_fraction=1.0)  # night!
@@ -34,13 +33,15 @@ tp, fp, conf = detection.detection_metrics(gt, fused)
 print(f"  fused   : detection {float(tp)*100:5.1f}%  conf {float(conf):.2f}"
       f"   <- recovers targets both modalities are unsure about")
 
-# stochastic-circuit path on a tile: SNE encode -> packed AND -> popcount
+# stochastic-circuit path on a tile, one fused kernel launch:
+# encode -> AND -> popcount -> argmax without leaving VMEM
 tile = p_modal[:, :4096, :]                       # (2, pixels, 2)
-streams = sne_encode(jax.random.PRNGKey(1), tile, 256)    # (2, pix, 2, words)
-counts = pand_popcount(streams).astype(jnp.float32)        # (pix, 2)
+decisions, counts = bayes_decide(jax.random.PRNGKey(1), tile, 256)
+counts = counts.astype(jnp.float32)                        # (pix, 2)
 stoch = counts[:, 0] / jnp.maximum(counts.sum(-1), 1.0)
 err = float(jnp.mean(jnp.abs(stoch - fused.reshape(-1)[:4096])))
-print(f"\nstochastic circuit (256-bit streams) vs analytic fusion: "
-      f"mean abs err {err:.3f}")
+agree = float(jnp.mean((decisions == (fused.reshape(-1)[:4096] < 0.5)).astype(jnp.float32)))
+print(f"\nfused stochastic circuit (256-bit streams) vs analytic fusion: "
+      f"mean abs err {err:.3f}, decision agreement {agree*100:.1f}%")
 print("(the hardware operator is this pipeline with memristor entropy; "
       "<0.4 ms/frame at 100-bit on the paper's substrate)")

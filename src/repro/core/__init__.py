@@ -1,7 +1,7 @@
 """Core library: the paper's contribution as composable JAX modules."""
 
-from repro.core import bitops, cordiv, correlation, device, fusion, graph, inference, latency, logic, sne  # noqa: F401
-from repro.core.cordiv import cordiv_ratio, cordiv_scan, make_superset  # noqa: F401
+from repro.core import bitops, cordiv, correlation, device, fusion, graph, inference, latency, logic, rng, sne  # noqa: F401
+from repro.core.cordiv import cordiv_fill, cordiv_ratio, cordiv_scan, make_superset  # noqa: F401
 from repro.core.device import DEFAULT_PARAMS, MemristorParams  # noqa: F401
 from repro.core.fusion import bayes_fusion, detection_fusion, fuse_analytic  # noqa: F401
 from repro.core.inference import analytic_posterior, bayes_inference, bayes_inference_marginal  # noqa: F401

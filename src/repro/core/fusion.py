@@ -97,7 +97,7 @@ def bayes_fusion(
     # (the tree output is not a bitwise superset; complete it, as Fig S10's
     # normalization module does with its feedback register).
     denom_sup = numer | denom[..., None, :]
-    _, q_scan = cordiv.cordiv_scan(numer, denom_sup, n_bits)   # (..., K)
+    _, q_scan = cordiv.cordiv_fill(numer, denom_sup, n_bits)   # (..., K)
     z = jnp.sum(q_scan, axis=-1, keepdims=True)
     fused_scan = jnp.where(z > 0, q_scan / jnp.maximum(z, 1e-9), 1.0 / k)
 

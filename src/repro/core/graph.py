@@ -58,7 +58,7 @@ def two_parent_one_child(
     hi = bitops.bmux(s_a2, s_cpt[2], s_cpt[3])   # A1 = 1 branch
     denom = bitops.bmux(s_a1, lo, hi)            # = P(B)
     numer = bitops.band(s_a1, hi)                # = P(A1=1, B)
-    _, post_scan = cordiv.cordiv_scan(numer, denom, n_bits)
+    _, post_scan = cordiv.cordiv_fill(numer, denom, n_bits)
     post_ratio = cordiv.cordiv_ratio(numer, denom)
     return post_scan, post_ratio, analytic_two_parent(p_a1, p_a2, cpt)
 
@@ -89,6 +89,6 @@ def one_parent_two_child(
     denom = bitops.band(
         bitops.bmux(s_a, s_b1n, s_b1a), bitops.bmux(s_a, s_b2n, s_b2a)
     )
-    _, post_scan = cordiv.cordiv_scan(numer, denom, n_bits)
+    _, post_scan = cordiv.cordiv_fill(numer, denom, n_bits)
     post_ratio = cordiv.cordiv_ratio(numer, denom)
     return post_scan, post_ratio, analytic_one_parent_two_child(p_a, p_b1, p_b2)

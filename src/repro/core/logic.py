@@ -17,7 +17,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitops, sne
+from repro.core import bitops, rng, sne
 
 
 class Corr(enum.Enum):
@@ -138,8 +138,8 @@ def mux_tree(key, streams: jnp.ndarray, n_bits: int) -> jnp.ndarray:
     while level.shape[-2] > 1:
         key, sub = jax.random.split(key)
         half = level.shape[-2] // 2
-        sel = sne.encode_uncorrelated(
-            sub, jnp.full(level.shape[:-2] + (half,), 0.5, jnp.float32), n_bits
-        )
+        # Fair-coin selects come straight from the packed generator (rng.fair_bits):
+        # 1 entropy bit per stream bit, no comparator pass at all.
+        sel = rng.fair_bits(sub, level.shape[:-2] + (half,), n_bits)
         level = bitops.bmux(sel, level[..., 0::2, :], level[..., 1::2, :])
     return level[..., 0, :], k_pad

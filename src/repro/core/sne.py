@@ -13,7 +13,12 @@ pulse amplitude ``V_in`` (uncorrelated mode, Fig 2b) or the comparator reference
 * ``encode_via_device``   -- drives the encoder from the OU memristor simulator so
   statistical equivalence with the calibrated device can be asserted in tests.
 
-Streams are returned packed (see :mod:`repro.core.bitops`).
+Streams are returned packed (see :mod:`repro.core.bitops`).  The production
+encoders run entirely in the packed uint32 domain through
+:mod:`repro.core.rng` -- counter-based byte entropy compared against the 8-bit
+programmed threshold, no per-bit float intermediates and no ``pack_bits``
+(DESIGN.md SS3).  The float-uniform construction survives only in
+``encode_float_reference``, the statistical oracle used by tests.
 """
 
 from __future__ import annotations
@@ -21,7 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitops
+from repro.core import bitops, rng
 from repro.core.device import DEFAULT_PARAMS, MemristorParams, sample_ou_path
 
 
@@ -56,12 +61,10 @@ def vref_from_p(p: jax.Array, params: MemristorParams = DEFAULT_PARAMS) -> jnp.n
 def encode_uncorrelated(key: jax.Array, p: jax.Array, n_bits: int) -> jnp.ndarray:
     """Encode probabilities ``p`` (any shape) into independent packed streams.
 
-    Output shape: ``p.shape + (n_words,)``.
+    Output shape: ``p.shape + (n_words,)``.  Runs in the packed domain
+    (counter-based byte entropy, 8-bit threshold comparator).
     """
-    p = jnp.asarray(p, jnp.float32)
-    u = jax.random.uniform(key, p.shape + (n_bits,), dtype=jnp.float32)
-    bits = u < p[..., None]
-    return bitops.pack_bits(bits)
+    return rng.encode_packed(key, p, n_bits)
 
 
 def encode_correlated(
@@ -72,20 +75,26 @@ def encode_correlated(
 ) -> jnp.ndarray:
     """Encode ``p`` (shape ``(..., k)``) as ``k`` streams sharing one entropy source.
 
-    All streams in the trailing axis use the same per-bit uniform ``u`` (one SNE,
-    many comparator references), so ``bit_i = u < p_i`` -- maximal positive
-    correlation.  Entries where ``negate`` is truthy use the complementary
-    comparator (NOT gate): ``bit_i = (1 - u) < p_i`` -- maximal negative
-    correlation with the non-negated streams.
+    All streams in the trailing axis compare the same per-bit entropy byte
+    against their own threshold (one SNE, many comparator references), so
+    ``bit_i = byte < t_i`` -- maximal positive correlation.  Entries where
+    ``negate`` is truthy use the complementary comparator (NOT gate):
+    ``bit_i = (255 - byte) < t_i`` -- maximal negative correlation with the
+    non-negated streams.
+    """
+    return rng.encode_packed_correlated(key, p, n_bits, negate=negate)
+
+
+def encode_float_reference(key: jax.Array, p: jax.Array, n_bits: int) -> jnp.ndarray:
+    """The seed float32-uniform encoder, kept as a statistical oracle for tests.
+
+    Draws ``(..., n_bits)`` float uniforms and packs -- 32 bits of entropy
+    traffic per stream bit.  Production code should use
+    :func:`encode_uncorrelated` instead.
     """
     p = jnp.asarray(p, jnp.float32)
-    u = jax.random.uniform(key, p.shape[:-1] + (1, n_bits), dtype=jnp.float32)
-    if negate is None:
-        bits = u < p[..., None]
-    else:
-        neg = jnp.asarray(negate, bool)[..., None]
-        uu = jnp.where(neg, 1.0 - u, u)
-        bits = uu < p[..., None]
+    u = jax.random.uniform(key, p.shape + (n_bits,), dtype=jnp.float32)
+    bits = u < p[..., None]
     return bitops.pack_bits(bits)
 
 

@@ -1,10 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
 Each kernel directory carries kernel.py (pl.pallas_call + BlockSpec), ops.py
-(jit'd public wrapper) and ref.py (pure-jnp oracle).  Kernels are validated in
-interpret mode on CPU; on TPU set ``interpret=False``.
+(jit'd public wrapper) and ref.py (pure-jnp oracle).  The ``interpret`` flag
+is auto-detected per backend (``repro.kernels.backend``): compiled on
+TPU/GPU, interpreter only as the CPU fallback.
 """
 
+from repro.kernels import backend  # noqa: F401
+from repro.kernels.bayes_decide import bayes_decide, bayes_decide_packed, bayes_decide_ref  # noqa: F401
 from repro.kernels.fusion_map import fusion_map, fusion_map_ref  # noqa: F401
 from repro.kernels.pand_popcount import pand_popcount, pand_popcount_ref  # noqa: F401
 from repro.kernels.sne_encode import sne_encode, sne_encode_ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""Backend dispatch shared by all Pallas kernels.
+
+Every kernel wrapper used to hardcode ``interpret=True`` -- correct on CPU,
+but it silently ran the Pallas *interpreter* on real TPU/GPU backends, turning
+the kernels into demos.  This module centralises the decision:
+
+* ``interpret=None`` (the default everywhere) -> auto-detect: compile the
+  kernel on TPU/GPU, fall back to interpret mode only when the default JAX
+  backend is CPU (where Mosaic cannot lower).
+* ``interpret=True`` / ``False`` -> explicit override, e.g. tests that pin
+  interpret mode for determinism, or benchmarks probing both paths.
+
+Block-size choice is also shared here so the per-kernel wrappers stay thin.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """True only when the default JAX backend cannot compile Pallas (CPU)."""
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the tri-state ``interpret`` flag to a concrete bool."""
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)
+
+
+def resolve_use_kernel(use_kernel: bool | None, interpret: bool) -> bool:
+    """Resolve ``use_kernel=None``: run the Pallas kernel only where it compiles.
+
+    The interpreter exists to validate kernels against their oracles, not to
+    serve traffic -- when the resolved mode is interpret (CPU fallback), the
+    production default is the pure-jnp reference, which XLA fuses natively.
+    """
+    if use_kernel is None:
+        return not interpret
+    return bool(use_kernel)
+
+
+def pick_block(rows: int, preferred: int) -> int:
+    """Largest block size from the standard ladder that tiles ``rows`` exactly."""
+    for cand in (preferred, 256, 128, 64, 32, 8):
+        if cand <= rows and rows % cand == 0:
+            return cand
+    return 1

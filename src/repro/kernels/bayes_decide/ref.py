@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused Bayes decision kernel.
+
+Semantics (shared with the kernel, bit-exact): each uint32 entropy word
+contributes 4 uniform bytes; stream bit = ``byte < round(p * 256)``; a
+decision's class score is the popcount of the M-way AND of its modal streams;
+the decision is the first-occurrence argmax over classes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.rng import threshold_from_p
+
+
+def bayes_decide_ref(p: jnp.ndarray, rand_words: jnp.ndarray):
+    """p: (M, R, K) f32; rand_words: (M, R, K, n_rand) u32.
+
+    Returns (decisions (R,) int32, counts (R, K) int32).
+    """
+    thresh = threshold_from_p(p)
+    total = jnp.zeros(p.shape[1:], jnp.int32)
+    for byte in range(4):
+        lane = (rand_words >> jnp.uint32(8 * byte)) & jnp.uint32(0xFF)
+        bits = lane < thresh[..., None]
+        joint = jnp.all(bits, axis=0)                      # (R, K, n_rand)
+        total = total + jnp.sum(joint.astype(jnp.int32), axis=-1)
+    return jnp.argmax(total, axis=-1).astype(jnp.int32), total

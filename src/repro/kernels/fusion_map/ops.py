@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend
 from repro.kernels.fusion_map.kernel import fusion_map_pallas
 from repro.kernels.fusion_map.ref import fusion_map_ref
 
@@ -16,13 +17,16 @@ def fusion_map(
     p_modal: jnp.ndarray,
     prior: jnp.ndarray | None = None,
     *,
-    use_kernel: bool = True,
-    interpret: bool = True,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Analytic eq-(5) fusion over class maps.
 
     p_modal: (M, ..., K); prior (K,) or None (uniform).  Returns (..., K).
+    ``interpret=None`` auto-detects the backend.
     """
+    interpret = backend.resolve_interpret(interpret)
+    use_kernel = backend.resolve_use_kernel(use_kernel, interpret)
     p_modal = jnp.asarray(p_modal, jnp.float32)
     m = p_modal.shape[0]
     k = p_modal.shape[-1]
@@ -30,8 +34,7 @@ def fusion_map(
         prior = jnp.full((k,), 1.0 / k, jnp.float32)
     flat = p_modal.reshape(m, -1, k)
     if use_kernel:
-        rows = flat.shape[1]
-        block = 256 if rows % 256 == 0 else (64 if rows % 64 == 0 else 1)
+        block = backend.pick_block(flat.shape[1], 256)
         out = fusion_map_pallas(flat, prior, block_r=block, interpret=interpret)
     else:
         out = fusion_map_ref(flat, prior)

@@ -7,24 +7,27 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend
 from repro.kernels.pand_popcount.kernel import pand_popcount_pallas
 from repro.kernels.pand_popcount.ref import pand_popcount_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def pand_popcount(
-    streams: jnp.ndarray, *, use_kernel: bool = True, interpret: bool = True
+    streams: jnp.ndarray, *, use_kernel: bool | None = None, interpret: bool | None = None
 ) -> jnp.ndarray:
     """Fused probabilistic-AND across modalities + popcount.
 
     streams: (M, ..., n_words) uint32.  Returns (...,) int32 counts.
+    ``interpret=None`` auto-detects the backend.
     """
+    interpret = backend.resolve_interpret(interpret)
+    use_kernel = backend.resolve_use_kernel(use_kernel, interpret)
     m = streams.shape[0]
     n_words = streams.shape[-1]
     flat = streams.reshape(m, -1, n_words)
     if use_kernel:
-        rows = flat.shape[1]
-        block = 512 if rows % 512 == 0 else (64 if rows % 64 == 0 else 1)
+        block = backend.pick_block(flat.shape[1], 512)
         out = pand_popcount_pallas(flat, block_r=block, interpret=interpret)
     else:
         out = pand_popcount_ref(flat)

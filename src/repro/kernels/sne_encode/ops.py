@@ -7,6 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import rng
+from repro.kernels import backend
 from repro.kernels.sne_encode.kernel import sne_encode_pallas
 from repro.kernels.sne_encode.ref import sne_encode_ref
 
@@ -17,8 +19,8 @@ def sne_encode(
     p: jnp.ndarray,
     n_bits: int = 128,
     *,
-    use_kernel: bool = True,
-    interpret: bool = True,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Encode probabilities ``p`` (any shape) into packed stochastic numbers.
 
@@ -26,15 +28,18 @@ def sne_encode(
     Entropy is drawn from the counter-based PRNG (the TPU stand-in for the
     memristor's stochastic V_th; see DESIGN.md SS2) -- on real TPUs this becomes
     in-kernel ``pltpu.prng_random_bits`` with identical semantics.
+    ``interpret=None`` auto-detects the backend (compiled on TPU/GPU,
+    interpreter only as CPU fallback).
     """
     assert n_bits % 32 == 0, "kernel path packs whole uint32 words"
+    interpret = backend.resolve_interpret(interpret)
+    use_kernel = backend.resolve_use_kernel(use_kernel, interpret)
     p = jnp.asarray(p, jnp.float32)
     flat = p.reshape(-1)
     n_rand = n_bits // 4  # 4 bytes (stream bits) per random word
-    rand = jax.random.bits(key, (flat.shape[0], n_rand), jnp.uint32)
+    rand = rng.counter_hash_words(key, (flat.shape[0],), n_rand)
     if use_kernel:
-        rows = flat.shape[0]
-        block = 256 if rows % 256 == 0 else (64 if rows % 64 == 0 else 1)
+        block = backend.pick_block(flat.shape[0], 256)
         out = sne_encode_pallas(flat, rand, block_r=block, interpret=interpret)
     else:
         out = sne_encode_ref(flat, rand)

@@ -24,7 +24,15 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--threshold", type=float, default=0.5)
     ap.add_argument("--no-gate", action="store_true")
+    ap.add_argument("--stochastic-gate", action="store_true",
+                    help="gate through the fused bayes_decide kernel "
+                         "(the paper's SC circuit) instead of the analytic path")
+    ap.add_argument("--gate-bits", type=int, default=256)
     args = ap.parse_args()
+    if args.gate_bits % 32 != 0 or args.gate_bits <= 0:
+        ap.error(f"--gate-bits must be a positive multiple of 32 "
+                 f"(got {args.gate_bits}); the packed pipeline consumes whole "
+                 f"uint32 entropy words")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = api.init(cfg, jax.random.PRNGKey(0))
@@ -33,6 +41,7 @@ def main():
         EngineConfig(
             max_batch=args.requests, t_cache=128,
             bayes_gate=not args.no_gate, confidence_threshold=args.threshold,
+            stochastic_gate=args.stochastic_gate, gate_n_bits=args.gate_bits,
         ),
     )
     rng = np.random.default_rng(0)

@@ -18,8 +18,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitops, sne
 from repro.core.fusion import fuse_analytic
+from repro.kernels.bayes_decide.ops import bayes_decide
 
 
 def fuse_posteriors(
@@ -62,7 +62,11 @@ def reliable_decision(
 def fuse_posteriors_stochastic(
     key: jax.Array, logits_sources: jnp.ndarray, top_k: int = 8, n_bits: int = 256
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Same decision through the paper's SC circuit (SNE + AND + popcount)."""
+    """Same decision through the paper's SC circuit, via the fused kernel.
+
+    One ``bayes_decide`` launch does encode -> M-way AND -> popcount -> argmax
+    in a single pass; nothing per-bit is materialised.
+    """
     m, b, v = logits_sources.shape
     mean_logits = jnp.mean(logits_sources, axis=0)
     _, cand = jax.lax.top_k(mean_logits, top_k)
@@ -70,13 +74,10 @@ def fuse_posteriors_stochastic(
         logits_sources, cand[None].repeat(m, 0), axis=-1
     )
     p = jax.nn.softmax(cand_logits, axis=-1)                     # (M, B, k)
-    streams = sne.encode_uncorrelated(key, p, n_bits)            # (M, B, k, W)
-    numer = streams[0]
-    for i in range(1, m):
-        numer = bitops.band(numer, streams[i])
-    counts = bitops.popcount(numer).astype(jnp.float32)          # (B, k)
-    fused = counts / jnp.maximum(counts.sum(-1, keepdims=True), 1.0)
-    best = jnp.argmax(fused, axis=-1)
+    best, counts = bayes_decide(key, p, n_bits)                  # (B,), (B, k)
+    fused = counts.astype(jnp.float32) / jnp.maximum(
+        counts.sum(-1, keepdims=True).astype(jnp.float32), 1.0
+    )
     token = jnp.take_along_axis(cand, best[:, None], axis=-1)[:, 0]
     conf = jnp.take_along_axis(fused, best[:, None], axis=-1)[:, 0]
     return token, conf

@@ -42,6 +42,8 @@ class EngineConfig:
     confidence_threshold: float = 0.5
     ensemble_temp: float = 1.3         # second posterior source (perturbed)
     greedy: bool = True
+    stochastic_gate: bool = False      # route the gate through the fused
+    gate_n_bits: int = 256             # bayes_decide kernel (paper circuit)
 
 
 class ServeEngine:
@@ -92,7 +94,13 @@ class ServeEngine:
             sources = jnp.stack(
                 [last_logits, last_logits / self.ecfg.ensemble_temp], axis=0
             )
-            token, conf, _ = bayes_head.fuse_posteriors(sources, top_k=8)
+            if self.ecfg.stochastic_gate:
+                # paper circuit end-to-end: one fused bayes_decide launch
+                token, conf = bayes_head.fuse_posteriors_stochastic(
+                    key, sources, top_k=8, n_bits=self.ecfg.gate_n_bits
+                )
+            else:
+                token, conf, _ = bayes_head.fuse_posteriors(sources, top_k=8)
             ok, token = bayes_head.reliable_decision(
                 token, conf, self.ecfg.confidence_threshold
             )

@@ -7,3 +7,6 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Make the optional-hypothesis shim (tests/hypcompat.py) importable from any
+# test module regardless of pytest's rootdir/package resolution.
+sys.path.insert(0, os.path.dirname(__file__))

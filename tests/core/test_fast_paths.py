@@ -1,0 +1,164 @@
+"""Packed-domain fast paths vs their oracles.
+
+* word-parallel CORDIV (`cordiv_fill`) must equal the bit-serial circuit
+  (`cordiv_scan`) bit-for-bit -- on the subset-correlated pairs the operators
+  produce, and on arbitrary uncorrelated pairs (the fill is exact circuit
+  semantics, not an approximation).
+* the counter-based SNE must match the float-uniform reference encoder's
+  mean and correlation statistics within the O(1/sqrt(n_bits)) band, in all
+  correlation modes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitops, cordiv, correlation, logic, rng, sne
+from repro.core.logic import Corr
+
+
+# --- word-parallel CORDIV == serial circuit, bit for bit --------------------------
+
+@pytest.mark.parametrize("n_bits", [32, 100, 128, 129, 1000, 1 << 14])
+@pytest.mark.parametrize("shape", [(), (3,), (2, 4)])
+def test_cordiv_fill_equals_scan_on_subsets(n_bits, shape):
+    key = jax.random.PRNGKey(n_bits * 31 + len(shape))
+    k1, k2 = jax.random.split(key)
+    d = sne.encode_uncorrelated(k1, jnp.full(shape, 0.7), n_bits)
+    n = d & sne.encode_uncorrelated(k2, jnp.full(shape, 0.6), n_bits)
+    q_scan, est_scan = cordiv.cordiv_scan(n, d, n_bits)
+    q_fill, est_fill = cordiv.cordiv_fill(n, d, n_bits)
+    np.testing.assert_array_equal(np.asarray(q_scan), np.asarray(q_fill))
+    np.testing.assert_allclose(np.asarray(est_scan), np.asarray(est_fill))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_cordiv_fill_equals_scan_on_arbitrary_pairs(seed):
+    """The fill is exact D-flip-flop semantics even without subset correlation."""
+    n_bits = [96, 100, 512, 1 << 13][seed % 4]
+    key = jax.random.PRNGKey(seed)
+    k1, k2, kp = jax.random.split(key, 3)
+    pa, pb = jax.random.uniform(kp, (2,))
+    a = sne.encode_uncorrelated(k1, jnp.full((5,), pa), n_bits)
+    b = sne.encode_uncorrelated(k2, jnp.full((5,), pb), n_bits)
+    q_scan, _ = cordiv.cordiv_scan(a, b, n_bits)
+    q_fill, _ = cordiv.cordiv_fill(a, b, n_bits)
+    np.testing.assert_array_equal(np.asarray(q_scan), np.asarray(q_fill))
+
+
+def test_cordiv_fill_superset_completion_pairs():
+    """The make_superset construction (marginal-P(B) inference) stays bit-exact."""
+    n_bits = 1 << 12
+    key = jax.random.PRNGKey(77)
+    k1, k2 = jax.random.split(key)
+    n = sne.encode_uncorrelated(k1, 0.3, n_bits)
+    d = cordiv.make_superset(k2, n, 0.3, 0.8, n_bits)
+    q_scan, _ = cordiv.cordiv_scan(n, d, n_bits)
+    q_fill, _ = cordiv.cordiv_fill(n, d, n_bits)
+    np.testing.assert_array_equal(np.asarray(q_scan), np.asarray(q_fill))
+
+
+def test_cordiv_fill_pad_bits_stay_zero():
+    n_bits = 100
+    d = sne.encode_uncorrelated(jax.random.PRNGKey(1), 0.9, n_bits)
+    q, _ = cordiv.cordiv_fill(d, d, n_bits)
+    assert int(bitops.popcount(q & ~bitops.pad_mask(n_bits))) == 0
+
+
+def test_cordiv_fill_empty_inputs_bounded():
+    zeros = jnp.zeros((4,), jnp.uint32)
+    q, est = cordiv.cordiv_fill(zeros, zeros, 128)
+    assert int(bitops.popcount(q)) == 0
+    assert float(est) == 0.0
+
+
+# --- counter-based SNE vs float-uniform reference statistics ----------------------
+
+N = 1 << 14
+SIGMA = 0.5 / np.sqrt(N)  # worst-case Bernoulli std at p=0.5
+
+
+@pytest.mark.parametrize("p", [0.05, 0.3, 0.5, 0.72, 0.95])
+def test_counter_sne_mean_matches_float_reference(p):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(int(p * 1000)))
+    est_ctr = float(bitops.decode(sne.encode_uncorrelated(k1, p, N), N))
+    est_flt = float(bitops.decode(sne.encode_float_reference(k2, p, N), N))
+    # both unbiased up to the 8-bit DAC quantisation (<= 1/512); 6-sigma band
+    assert abs(est_ctr - p) < 1.0 / 512 + 6 * SIGMA
+    assert abs(est_ctr - est_flt) < 1.0 / 512 + 8 * SIGMA
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_counter_sne_positive_correlation_stats(seed):
+    key = jax.random.PRNGKey(seed)
+    pa, pb = 0.6, 0.35
+    a, b = logic.encode_pair(key, pa, pb, N, Corr.POSITIVE)
+    # Table S1 positive mode: AND -> min, and SCC -> +1
+    est_and = float(bitops.decode(a & b, N))
+    assert abs(est_and - min(pa, pb)) < 0.02
+    assert float(correlation.scc(a, b, N)) > 0.95
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_counter_sne_negative_correlation_stats(seed):
+    key = jax.random.PRNGKey(100 + seed)
+    pa, pb = 0.6, 0.55
+    a, b = logic.encode_pair(key, pa, pb, N, Corr.NEGATIVE)
+    # Table S1 negative mode: AND -> max(pa+pb-1, 0), SCC -> -1
+    est_and = float(bitops.decode(a & b, N))
+    assert abs(est_and - max(pa + pb - 1.0, 0.0)) < 0.02
+    assert float(correlation.scc(a, b, N)) < -0.95
+
+
+def test_counter_sne_uncorrelated_streams_independent():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    a = sne.encode_uncorrelated(k1, 0.5, N)
+    b = sne.encode_uncorrelated(k2, 0.5, N)
+    assert abs(float(correlation.pearson(a, b, N))) < 6 * SIGMA * 2
+
+
+def test_counter_sne_entropy_traffic():
+    """The packed encoder consumes 8 entropy bits per stream bit (vs 32 float)."""
+    assert rng.n_rand_words(128) == 32          # 32 u32 words for 128 stream bits
+    assert rng.n_rand_words(100) == 32          # word-padded
+    w = rng.random_words(jax.random.PRNGKey(0), (3,), 128)
+    assert w.shape == (3, 32) and w.dtype == jnp.uint32
+
+
+def test_counter_hash_generator_statistics():
+    """The lowbias32 counter generator is statistically clean: byte means,
+    pairwise stream correlation, and lag-1 autocorrelation all within
+    binomial noise at 2^14 bits."""
+    n_rand = N // 4
+    w = rng.counter_hash_words(jax.random.PRNGKey(3), (8,), n_rand)
+    shifts = jnp.arange(4, dtype=jnp.uint32) * 8
+    by = (w[..., None] >> shifts) & jnp.uint32(0xFF)
+    bits = np.asarray((by < jnp.uint32(128)).astype(jnp.float32).reshape(8, -1))
+    assert np.abs(bits.mean(-1) - 0.5).max() < 6 * SIGMA
+    c = np.corrcoef(bits)
+    np.fill_diagonal(c, 0)
+    assert np.abs(c).max() < 6 * SIGMA
+    flat = bits.reshape(-1)
+    assert abs(np.corrcoef(flat[:-1], flat[1:])[0, 1]) < 6 * 0.5 / np.sqrt(flat.size)
+
+
+def test_counter_hash_deterministic_and_keyed():
+    a = rng.counter_hash_words(jax.random.PRNGKey(1), (4,), 16)
+    b = rng.counter_hash_words(jax.random.PRNGKey(1), (4,), 16)
+    c = rng.counter_hash_words(jax.random.PRNGKey(2), (4,), 16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_threefry_impl_available():
+    w = rng.random_words(jax.random.PRNGKey(0), (2,), 128, impl="threefry")
+    assert w.shape == (2, 32) and w.dtype == jnp.uint32
+
+
+def test_fair_bits_is_half():
+    s = rng.fair_bits(jax.random.PRNGKey(4), (), N)
+    assert abs(float(bitops.decode(s, N)) - 0.5) < 6 * SIGMA
+    # pad bits zero on non-aligned lengths
+    s100 = rng.fair_bits(jax.random.PRNGKey(5), (), 100)
+    assert int(bitops.popcount(s100 & ~bitops.pad_mask(100))) == 0

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypcompat import given, settings, st  # optional-hypothesis shim (tests/hypcompat.py)
 
 from repro.core import bitops, cordiv, correlation, fusion, graph, inference
 

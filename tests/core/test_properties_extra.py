@@ -3,8 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypcompat import given, settings, st  # optional-hypothesis shim (tests/hypcompat.py)
 
 from repro.core import bitops, sne
 from repro.core.fusion import fuse_analytic

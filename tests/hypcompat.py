@@ -1,0 +1,68 @@
+"""Optional-`hypothesis` shim for property tests.
+
+`hypothesis` lives in the test extra (see requirements.txt), not the runtime
+deps.  When it is installed, this module re-exports the real ``given`` /
+``settings`` / ``st`` unchanged.  When it is missing, each ``@given`` test
+degrades to a single deterministic mid-range example instead of failing
+collection (the seed repo died with ``ModuleNotFoundError`` here) -- the
+full property sweep still runs wherever the extra is installed (CI).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to one representative example per test
+    import itertools
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A strategy reduced to a small list of representative examples."""
+
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            return _Strategy([mid, min_value, max_value])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            mid = 0.5 * (min_value + max_value)
+            return _Strategy([mid, min_value, max_value])
+
+    st = _St()
+
+    def given(**strategies):
+        """Run the test over the cartesian product of fallback examples,
+        capped to keep runtime close to one hypothesis example."""
+
+        def deco(fn):
+            combos = list(itertools.islice(
+                itertools.product(*(s.examples for s in strategies.values())), 3
+            ))
+            names = list(strategies.keys())
+
+            # zero-arg wrapper: the strategy params must NOT appear in the
+            # signature pytest inspects, or it would resolve them as fixtures
+            def wrapper():
+                for combo in combos:
+                    fn(**dict(zip(names, combo)))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
