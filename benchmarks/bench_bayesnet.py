@@ -1,0 +1,52 @@
+"""Bayesnet compiler throughput: frames/sec vs network size.
+
+Each scenario network is compiled once (shared-entropy packed program,
+``estimator='ratio'``) and timed over a 1024-frame evidence batch in a single
+jit launch; the derived column records frames/sec, node count and fan-in so
+the BENCH_*.json trajectory tracks how scenario scale affects the hot path.
+The independent-entropy mode is timed once as the costed upper bound (fresh
+joint sample per frame).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+
+N_FRAMES = 1024
+N_BITS = 4096
+
+
+def run() -> None:
+    from repro.bayesnet import by_name, compile_network, sample_evidence
+
+    key = jax.random.PRNGKey(0)
+    for name in ("sensor-degradation", "pedestrian-night", "intersection"):
+        spec = by_name(name)
+        net = compile_network(spec, n_bits=N_BITS)
+        ev = sample_evidence(spec, jax.random.PRNGKey(1), N_FRAMES)
+        us = common.timeit(lambda n=net, e=ev: n.run(key, e))
+        fps = N_FRAMES / (us / 1e6)
+        common.emit(
+            f"bayesnet_{name}_batch{N_FRAMES}",
+            us,
+            f"{fps:,.0f} frames/s | {spec.n_nodes} nodes fan-in {spec.max_fan_in()} "
+            f"n_bits {N_BITS}",
+        )
+
+    # independent entropy: every frame draws its own joint sample
+    spec = by_name("pedestrian-night")
+    net = compile_network(spec, n_bits=N_BITS, share_entropy=False)
+    ev = sample_evidence(spec, jax.random.PRNGKey(1), N_FRAMES)
+    us = common.timeit(lambda: net.run(key, ev))
+    common.emit(
+        f"bayesnet_pedestrian-night_indep_batch{N_FRAMES}",
+        us,
+        f"{N_FRAMES / (us / 1e6):,.0f} frames/s | fresh entropy per frame",
+    )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -12,6 +12,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        bench_bayesnet,
         bench_fig1_device,
         bench_fig2_logic,
         bench_fig3_inference,
@@ -30,6 +31,7 @@ def main() -> None:
         bench_table_s1,
         bench_fig3_inference,
         bench_fig4_fusion,
+        bench_bayesnet,
         bench_latency,
         bench_roofline,
     ):

@@ -1,0 +1,74 @@
+"""Scene graphs end to end: arbitrary Bayesian networks compiled to the packed
+stochastic substrate (the generalisation of the Fig S8 motif scripts).
+
+One declarative spec replaces the per-motif wiring: the compiler lowers any
+binary DAG to counter-entropy SNEs + parent-selected MUX trees + CORDIV, the
+enumeration oracle bounds it, and the frame driver batches streaming evidence.
+
+Run:  PYTHONPATH=src python examples/scene_graph.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bayesnet import (
+    FrameDriver, NetworkSpec, Node, by_name, compile_network,
+    make_posterior_fn, sample_evidence,
+)
+from repro.core import graph
+
+key = jax.random.PRNGKey(0)
+
+# 1. A Fig S8 motif is just a three-node spec ---------------------------------
+cpt = ((0.10, 0.60), (0.35, 0.90))
+motif = NetworkSpec(
+    name="fig-s8b",
+    nodes=(
+        Node("a1", (), (0.30,)),
+        Node("a2", (), (0.70,)),
+        Node("b", ("a1", "a2"), cpt[0] + cpt[1]),
+    ),
+    evidence=("b",), queries=("a1",),
+)
+net = compile_network(motif, n_bits=1 << 14)
+post, acc = net.run(key, jnp.array([[1]]))
+expect = float(graph.analytic_two_parent(0.30, 0.70, jnp.asarray(cpt)))
+print(f"1. Fig S8b as a spec: P(A1|B=1) = {float(post[0, 0]):.3f} "
+      f"(analytic {expect:.3f}, {int(acc[0])} accepted bits)")
+
+# 2. An 8-node scenario network, 2048 evidence frames, one jit launch ---------
+spec = by_name("pedestrian-night")
+net = compile_network(spec, n_bits=4096)
+ev = sample_evidence(spec, jax.random.PRNGKey(1), 2048)
+post, acc = net.run(key, ev)                     # warm-up + compile
+jax.block_until_ready(post)
+t0 = time.perf_counter()
+post, acc = net.run(key, ev)
+jax.block_until_ready(post)
+dt = time.perf_counter() - t0
+print(f"2. {spec.name}: {spec.n_nodes} nodes, queries {net.queries}, "
+      f"{ev.shape[0]} frames in {dt * 1e3:.2f} ms "
+      f"({ev.shape[0] / dt:,.0f} frames/s on {jax.default_backend()})")
+
+# 3. Exact enumeration oracle bounds the stochastic backend -------------------
+exact, _ = make_posterior_fn(spec, dac_quantize=True)(ev)
+err = np.abs(np.asarray(post) - np.asarray(exact))
+keep = np.asarray(acc) > 50
+print(f"3. vs enumeration oracle: mean |err| {err[keep].mean():.4f}, "
+      f"max {err[keep].max():.4f} over {int(keep.sum())} frames "
+      f"(stochastic floor ~{1 / np.sqrt(np.median(np.asarray(acc))):.4f})")
+
+# 4. Streaming frames through serve-style continuous batching -----------------
+drv = FrameDriver(net, max_batch=512)
+night_frame = np.array([1, 0, 1])                # night, no RGB, thermal fires
+day_frame = np.array([0, 1, 1])                  # day, both detectors fire
+drv.submit(night_frame); drv.submit(day_frame)
+out = drv.drain(jax.random.PRNGKey(2))
+q = net.queries.index("pedestrian")
+print(f"4. streamed frames: P(pedestrian | night, thermal-only) = {out[0][0][q]:.3f}, "
+      f"P(pedestrian | day, both) = {out[1][0][q]:.3f}")
+print("   (thermal alone at night is already decisive -- the Fig 4 rescue, "
+      "now produced by a compiled network instead of hand-wired operators)")

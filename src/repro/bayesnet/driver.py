@@ -1,0 +1,77 @@
+"""Streaming frame driver: serve-style batching for compiled networks.
+
+Mirrors the LM serving engine's admission discipline on the bayesnet side:
+frames are submitted at any time into a pending queue, and every ``step``
+packs up to ``max_batch`` of them -- padding the tail with the last real frame
+so the jit launch keeps one static shape -- runs the compiled program once,
+and returns per-request posteriors.  One compile, one launch shape, arbitrary
+arrival pattern: the continuous-batching contract.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.bayesnet.compile import CompiledNetwork
+
+
+class FrameDriver:
+    def __init__(self, net: CompiledNetwork, max_batch: int = 256):
+        self.net = net
+        self.max_batch = int(max_batch)
+        self._queue: deque = deque()
+        self._next_rid = 0
+
+    # ------------------------------------------------------------- admission
+    def submit(self, frames) -> List[int]:
+        """Queue evidence frames ((n_ev,) each, or an (N, n_ev) array); returns rids."""
+        frames = np.asarray(frames, np.int32)
+        if frames.ndim == 1:
+            frames = frames[None, :]
+        assert frames.shape[1] == len(self.net.evidence), frames.shape
+        rids = []
+        for row in frames:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._queue.append((rid, row))
+            rids.append(rid)
+        return rids
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ----------------------------------------------------------------- serve
+    def step(self, key: jax.Array) -> Dict[int, Tuple[np.ndarray, int]]:
+        """Run one batched launch over up to ``max_batch`` queued frames.
+
+        Returns {rid: (posteriors (n_q,), accepted bit count)}.  The launch
+        shape is always (max_batch, n_ev): short batches are padded by
+        repeating the final frame, and the padded rows' results are dropped.
+        """
+        if not self._queue:
+            return {}
+        taken = [self._queue.popleft() for _ in range(min(self.max_batch, len(self._queue)))]
+        ev = np.stack([row for _, row in taken])
+        n_real = ev.shape[0]
+        if n_real < self.max_batch:
+            pad = np.repeat(ev[-1:], self.max_batch - n_real, axis=0)
+            ev = np.concatenate([ev, pad], axis=0)
+        post, accepted = self.net.run(key, ev)
+        post, accepted = np.asarray(post), np.asarray(accepted)
+        return {
+            rid: (post[i], int(accepted[i]))
+            for i, (rid, _) in enumerate(taken)
+        }
+
+    def drain(self, key: jax.Array) -> Dict[int, Tuple[np.ndarray, int]]:
+        """Step until the queue is empty; returns all results keyed by rid."""
+        out: Dict[int, Tuple[np.ndarray, int]] = {}
+        while self._queue:
+            key, sub = jax.random.split(key)
+            out.update(self.step(sub))
+        return out

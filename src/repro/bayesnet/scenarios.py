@@ -1,0 +1,139 @@
+"""Scenario library: driving decision networks over the paper's sensor models.
+
+Each builder returns a :class:`~repro.bayesnet.spec.NetworkSpec` (5-12 binary
+nodes) whose sensor CPTs are taken from the synthetic FLIR statistics in
+``repro.data.detection.SceneConfig`` -- RGB visibility collapsing at night,
+thermal missing cold targets, detector confidences ``strong``/``weak`` -- so
+the compiled networks face exactly the failure modes the paper's fusion
+operator is built to survive.  Evidence sets name the observable sensor nodes;
+query sets name the latent state and the downstream decision.
+
+``SCENARIOS`` maps scenario id -> builder; ``by_name`` resolves one.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.bayesnet.spec import NetworkSpec, Node
+from repro.data.detection import SceneConfig
+
+_CFG = SceneConfig()
+
+
+def sensor_degradation(cfg: SceneConfig = _CFG) -> NetworkSpec:
+    """5 nodes: is a disagreeing sensor pair degraded, or is the world hot?"""
+    return NetworkSpec(
+        name="sensor-degradation",
+        nodes=(
+            Node("degraded", (), (0.08,)),
+            Node("heat", (), (0.30,)),
+            # CPT rows ordered (degraded, heat) = 00, 01, 10, 11
+            Node("reading_a", ("degraded", "heat"), (0.03, cfg.strong, 0.40, cfg.weak)),
+            Node("reading_b", ("degraded", "heat"), (0.05, cfg.strong, 0.45, cfg.weak)),
+            Node("agree", ("reading_a", "reading_b"), (0.95, 0.10, 0.10, 0.95)),
+        ),
+        evidence=("reading_a", "reading_b"),
+        queries=("degraded", "heat"),
+    )
+
+
+def pedestrian_night(cfg: SceneConfig = _CFG) -> NetworkSpec:
+    """8 nodes: the Fig 4 night-pedestrian setting as a full network.
+
+    RGB visibility drops from ``rgb_vis_day`` to ``rgb_vis_night`` after dark;
+    thermal only sees warm targets; the brake decision fuses both detectors.
+    """
+    return NetworkSpec(
+        name="pedestrian-night",
+        nodes=(
+            Node("night", (), (cfg.night_fraction,)),
+            Node("pedestrian", (), (0.20,)),
+            Node("warm", (), (0.70,)),
+            # (pedestrian, night) = 00, 01, 10, 11
+            Node("rgb_visible", ("pedestrian", "night"),
+                 (0.02, 0.02, cfg.rgb_vis_day, cfg.rgb_vis_night)),
+            # (pedestrian, warm) = 00, 01, 10, 11
+            Node("th_visible", ("pedestrian", "warm"),
+                 (0.03, 0.03, 0.30, cfg.strong)),
+            Node("rgb_detect", ("rgb_visible",), (0.08, cfg.strong)),
+            Node("th_detect", ("th_visible",), (0.08, cfg.strong)),
+            # (rgb_detect, th_detect) = 00, 01, 10, 11
+            Node("brake", ("rgb_detect", "th_detect"), (0.02, 0.70, 0.75, 0.98)),
+        ),
+        evidence=("night", "rgb_detect", "th_detect"),
+        queries=("pedestrian", "brake"),
+    )
+
+
+def lane_change(cfg: SceneConfig = _CFG) -> NetworkSpec:
+    """9 nodes: the paper's keep-lane / change-lane decision with radar+camera."""
+    return NetworkSpec(
+        name="lane-change",
+        nodes=(
+            Node("overtaker", (), (0.25,)),
+            Node("night", (), (cfg.night_fraction,)),
+            Node("sensor_fault", (), (0.05,)),
+            Node("gap_ahead", (), (0.60,)),
+            # (overtaker, sensor_fault) = 00, 01, 10, 11
+            Node("radar_echo", ("overtaker", "sensor_fault"),
+                 (0.06, 0.30, 0.92, cfg.weak)),
+            # (overtaker, night) = 00, 01, 10, 11
+            Node("camera_blob", ("overtaker", "night"),
+                 (0.05, 0.08, 0.90, cfg.rgb_vis_night)),
+            Node("blindspot_warn", ("radar_echo",), (0.04, 0.95)),
+            # (overtaker, gap_ahead) = 00, 01, 10, 11
+            Node("safe", ("overtaker", "gap_ahead"), (0.35, 0.95, 0.02, 0.15)),
+            # (safe, blindspot_warn) = 00, 01, 10, 11
+            Node("change_lane", ("safe", "blindspot_warn"), (0.10, 0.01, 0.90, 0.20)),
+        ),
+        evidence=("night", "camera_blob", "blindspot_warn", "gap_ahead"),
+        queries=("overtaker", "safe", "change_lane"),
+    )
+
+
+def intersection(cfg: SceneConfig = _CFG) -> NetworkSpec:
+    """12 nodes: right-of-way at an intersection, three-parent sensor CPTs."""
+    return NetworkSpec(
+        name="intersection",
+        nodes=(
+            Node("signal_green", (), (0.50,)),
+            Node("occlusion", (), (0.30,)),
+            Node("night", (), (cfg.night_fraction,)),
+            Node("cross_traffic", ("signal_green",), (0.50, 0.10)),
+            Node("ped_crossing", ("signal_green",), (0.15, 0.05)),
+            # (cross_traffic, occlusion, night) = 000 .. 111
+            Node("rgb_cross", ("cross_traffic", "occlusion", "night"),
+                 (0.04, 0.04, 0.03, 0.03,
+                  cfg.rgb_vis_day, cfg.rgb_vis_night, 0.40, 0.25)),
+            # (cross_traffic, occlusion) = 00, 01, 10, 11
+            Node("radar_cross", ("cross_traffic", "occlusion"),
+                 (0.05, 0.08, 0.93, 0.60)),
+            # (ped_crossing, night) = 00, 01, 10, 11
+            Node("rgb_ped", ("ped_crossing", "night"),
+                 (0.03, 0.03, cfg.rgb_vis_day, cfg.rgb_vis_night)),
+            Node("th_ped", ("ped_crossing",), (0.06, 0.80)),
+            Node("horn", ("cross_traffic",), (0.02, 0.25)),
+            # (signal_green, cross_traffic, ped_crossing) = 000 .. 111
+            Node("right_of_way", ("signal_green", "cross_traffic", "ped_crossing"),
+                 (0.10, 0.03, 0.02, 0.01, 0.97, 0.30, 0.20, 0.05)),
+            # (right_of_way, occlusion) = 00, 01, 10, 11
+            Node("proceed", ("right_of_way", "occlusion"), (0.05, 0.02, 0.95, 0.60)),
+        ),
+        evidence=("night", "rgb_cross", "radar_cross", "rgb_ped", "th_ped", "horn"),
+        queries=("cross_traffic", "ped_crossing", "proceed"),
+    )
+
+
+SCENARIOS: Dict[str, Callable[..., NetworkSpec]] = {
+    "sensor-degradation": sensor_degradation,
+    "pedestrian-night": pedestrian_night,
+    "lane-change": lane_change,
+    "intersection": intersection,
+}
+
+
+def by_name(name: str, cfg: SceneConfig = _CFG) -> NetworkSpec:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+    return SCENARIOS[name](cfg)

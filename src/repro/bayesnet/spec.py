@@ -1,0 +1,138 @@
+"""Declarative Bayesian-network specs over binary nodes.
+
+A :class:`NetworkSpec` is the compiler's source language: named binary nodes,
+DAG edges, one CPT row per parent assignment, plus the evidence/query sets the
+compiled program exposes.  The spec is pure data -- validation happens at
+construction, lowering happens in :mod:`repro.bayesnet.compile`, and the exact
+oracle in :mod:`repro.bayesnet.analytic` interprets the same spec, so the two
+backends can never drift apart structurally.
+
+CPT convention (matches ``core/graph.py``'s Fig S8 ordering): for a node with
+parents ``(P0, .., Pm-1)``, ``cpt`` is a flat tuple of ``2**m`` probabilities
+``P(node = 1 | parents)``, indexed by the binary number whose MOST significant
+bit is ``P0`` -- i.e. for two parents the order is 00, 01, 10, 11.  A root node
+has ``parents = ()`` and a length-1 ``cpt`` holding its prior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One binary variable: ``cpt[i] = P(node=1 | parent assignment i)``."""
+
+    name: str
+    parents: Tuple[str, ...] = ()
+    cpt: Tuple[float, ...] = (0.5,)
+
+    def __post_init__(self):
+        object.__setattr__(self, "parents", tuple(self.parents))
+        object.__setattr__(self, "cpt", tuple(float(p) for p in self.cpt))
+        if len(self.cpt) != 1 << len(self.parents):
+            raise ValueError(
+                f"node {self.name!r}: {len(self.parents)} parents need "
+                f"{1 << len(self.parents)} CPT rows, got {len(self.cpt)}"
+            )
+        for p in self.cpt:
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"node {self.name!r}: CPT entry {p} outside [0, 1]")
+        if len(set(self.parents)) != len(self.parents):
+            raise ValueError(f"node {self.name!r}: duplicate parent")
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    """A validated DAG of :class:`Node` plus evidence/query sets.
+
+    ``evidence``/``queries`` name the observed and posterior-target nodes the
+    compiled program is specialised for; both default to empty and can be
+    overridden at compile time.
+    """
+
+    name: str
+    nodes: Tuple[Node, ...]
+    evidence: Tuple[str, ...] = ()
+    queries: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "nodes", tuple(self.nodes))
+        object.__setattr__(self, "evidence", tuple(self.evidence))
+        object.__setattr__(self, "queries", tuple(self.queries))
+        names = [n.name for n in self.nodes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"{self.name}: duplicate node names")
+        by_name = {n.name: n for n in self.nodes}
+        for n in self.nodes:
+            for p in n.parents:
+                if p not in by_name:
+                    raise ValueError(f"{self.name}: {n.name!r} has unknown parent {p!r}")
+        for e in self.evidence + self.queries:
+            if e not in by_name:
+                raise ValueError(f"{self.name}: unknown evidence/query node {e!r}")
+        object.__setattr__(self, "_topo", _toposort(by_name))
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    def node(self, name: str) -> Node:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def topo_order(self) -> Tuple[str, ...]:
+        """Node names, parents always before children."""
+        return self._topo
+
+    def index(self, name: str) -> int:
+        """Position of ``name`` in the declared node order."""
+        for i, n in enumerate(self.nodes):
+            if n.name == name:
+                return i
+        raise KeyError(name)
+
+    def roots(self) -> Tuple[str, ...]:
+        return tuple(n.name for n in self.nodes if not n.parents)
+
+    def max_fan_in(self) -> int:
+        return max((len(n.parents) for n in self.nodes), default=0)
+
+
+def _toposort(by_name: Dict[str, Node]) -> Tuple[str, ...]:
+    """Kahn's algorithm; raises on cycles."""
+    indeg = {name: len(n.parents) for name, n in by_name.items()}
+    children: Dict[str, list] = {name: [] for name in by_name}
+    for name, n in by_name.items():
+        for p in n.parents:
+            children[p].append(name)
+    ready = sorted(name for name, d in indeg.items() if d == 0)
+    order = []
+    while ready:
+        name = ready.pop(0)
+        order.append(name)
+        for c in children[name]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                ready.append(c)
+    if len(order) != len(by_name):
+        cyc = sorted(name for name, d in indeg.items() if d > 0)
+        raise ValueError(f"cycle through nodes {cyc}")
+    return tuple(order)
+
+
+def chain(name: str, probs: Iterable[float], cond: Iterable[Tuple[float, float]]) -> NetworkSpec:
+    """Convenience: a Markov chain root -> n1 -> n2 ... (used in tests/benches).
+
+    ``probs`` gives the root prior; ``cond`` gives (P(child|parent=1),
+    P(child|parent=0)) per link.
+    """
+    probs = list(probs)
+    nodes = [Node("x0", (), (probs[0],))]
+    for i, (p1, p0) in enumerate(cond):
+        nodes.append(Node(f"x{i + 1}", (f"x{i}",), (p0, p1)))
+    return NetworkSpec(name=name, nodes=tuple(nodes))

@@ -15,7 +15,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitops, cordiv, sne
+from repro.core import bitops, cordiv, logic, sne
 
 
 def analytic_two_parent(p_a1, p_a2, cpt) -> jnp.ndarray:
@@ -53,11 +53,11 @@ def two_parent_one_child(
         for i in range(2)
         for j in range(2)
     ]  # order: 00, 01, 10, 11
-    # 4x1 MUX: selects are (A1, A2).
-    lo = bitops.bmux(s_a2, s_cpt[0], s_cpt[1])   # A1 = 0 branch
-    hi = bitops.bmux(s_a2, s_cpt[2], s_cpt[3])   # A1 = 1 branch
-    denom = bitops.bmux(s_a1, lo, hi)            # = P(B)
-    numer = bitops.band(s_a1, hi)                # = P(A1=1, B)
+    # 4x1 MUX: selects are (A1, A2), A1 the high bit -- the shared n-ary tree.
+    leaves = jnp.stack(s_cpt, axis=-2)
+    denom = logic.mux_select(jnp.stack([s_a1, s_a2]), leaves)          # = P(B)
+    hi = logic.mux_select(s_a2[None], leaves[..., 2:, :])              # A1 = 1 branch
+    numer = bitops.band(s_a1, hi)                                      # = P(A1=1, B)
     _, post_scan = cordiv.cordiv_fill(numer, denom, n_bits)
     post_ratio = cordiv.cordiv_ratio(numer, denom)
     return post_scan, post_ratio, analytic_two_parent(p_a1, p_a2, cpt)

@@ -121,6 +121,30 @@ def prob_mux(key, ps, pa, pb, n_bits: int, mode_inputs: Corr = Corr.UNCORRELATED
     return c, bitops.decode(c, n_bits), (s, a, b)
 
 
+def mux_select(selects: jnp.ndarray, leaves: jnp.ndarray) -> jnp.ndarray:
+    """Value-select MUX tree: per bit position t, route ``leaves[idx(t)]_t`` out,
+    where ``idx(t)`` is the binary number whose bits are the select streams' bits
+    at t (``selects[0]`` is the most significant -- the Fig S8 CPT ordering
+    "00, 01, 10, 11" with the first parent as the high bit).
+
+    selects: (m, ..., n_words) packed select streams.
+    leaves:  (..., L, n_words) packed data streams, L = 2**m.
+
+    This is the n-ary generalisation of the Fig S8 motifs' MUX wiring: a node
+    whose CPT row is picked by its parents' current sample.  The leaves stay
+    maximally shared -- every level of the tree reuses the same packed words, so
+    the numerator-subset-of-denominator discipline downstream is preserved
+    (an AND of any select with the winning branch is a subset of the output).
+    """
+    m = selects.shape[0]
+    assert leaves.shape[-2] == 1 << m, (leaves.shape, m)
+    level = leaves
+    for j in range(m - 1, -1, -1):
+        s = selects[j][..., None, :]
+        level = bitops.bmux(s, level[..., 0::2, :], level[..., 1::2, :])
+    return level[..., 0, :]
+
+
 def mux_tree(key, streams: jnp.ndarray, n_bits: int) -> jnp.ndarray:
     """Balanced MUX tree over ``streams`` (..., K, n_words) with fresh uniform selects.
 

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused CPT encode + parent-select MUX tree for one node.
+
+For a block of rows the kernel compares pre-drawn random bytes against the
+8-bit CPT thresholds (the SNE comparator, one per CPT row), packs 32 stream
+bits per uint32 lane word, and collapses the ``2**m`` leaf streams through the
+value-select MUX tree keyed by the parents' packed bits -- all in VMEM, nothing
+per-leaf ever reaching HBM.  This is the compiler's inner sweep: one launch per
+network node per batch block.
+
+Tiling: grid over rows (evidence frames / broadcast rows).  The working set is
+``block_r * L * (n_rand + W)`` words plus the ``m * block_r * W`` parent words,
+comfortably inside the ~16 MB VMEM budget for every scenario network
+(L <= 8, n_bits <= 2**14).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _node_mux_kernel(cpt_ref, rand_ref, par_ref, out_ref):
+    cpt = cpt_ref[...]                    # (bR, L) f32
+    rand = rand_ref[...]                  # (bR, L, n_rand) u32
+    parents = par_ref[...]                # (m, bR, W) u32
+    thresh = jnp.clip(jnp.round(cpt * 256.0), 0.0, 256.0).astype(jnp.uint32)
+    n_rand = rand.shape[-1]
+    w = n_rand // 8
+    # Encode all L leaves: 4 uniform bytes per entropy word, bit-plane packed
+    # (identical layout to the sne_encode kernel).
+    acc = jnp.zeros(rand.shape[:-1] + (w,), jnp.uint32)
+    for byte in range(4):
+        lane = (rand >> jnp.uint32(8 * byte)) & jnp.uint32(0xFF)
+        bits = (lane < thresh[..., None]).astype(jnp.uint32)
+        grouped = bits.reshape(bits.shape[:-1] + (w, 8))
+        shifts = (jnp.arange(8, dtype=jnp.uint32) * 4 + byte).astype(jnp.uint32)
+        acc = acc + jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+    # Value-select MUX tree, LSB parent first (first parent = MSB of the row
+    # index, matching core/logic.mux_select and the Fig S8 CPT ordering).
+    m = parents.shape[0]
+    level = acc                            # (bR, L, W)
+    for j in range(m - 1, -1, -1):
+        s = parents[j][:, None, :]         # (bR, 1, W)
+        level = (s & level[:, 1::2, :]) | (~s & level[:, 0::2, :])
+    out_ref[...] = level[:, 0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def node_mux_pallas(
+    cpt: jnp.ndarray,
+    rand_words: jnp.ndarray,
+    parents: jnp.ndarray,
+    *,
+    block_r: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """cpt (R, L) f32, rand_words (R, L, n_rand) u32, parents (m, R, W) u32
+    -> (R, W) u32 packed node streams."""
+    r, l, n_rand = rand_words.shape
+    m = parents.shape[0]
+    assert l == 1 << m, (l, m)
+    assert n_rand % 8 == 0
+    w = n_rand // 8
+    assert parents.shape == (m, r, w), (parents.shape, (m, r, w))
+    block_r = min(block_r, r)
+    assert r % block_r == 0, f"rows {r} not divisible by block {block_r}"
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _node_mux_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, l, n_rand), lambda i: (i, 0, 0)),
+            pl.BlockSpec((m, block_r, w), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, w), jnp.uint32),
+        interpret=interpret,
+    )(cpt, rand_words, parents)

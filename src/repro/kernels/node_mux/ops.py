@@ -1,0 +1,62 @@
+"""jit'd public wrapper for the node-MUX sweep (the bayesnet compiler's inner op).
+
+``node_mux`` turns one Bayesian-network node into its packed stochastic stream:
+encode the ``2**m`` CPT rows with fresh counter-based entropy, then select per
+bit position through the parents' packed streams (the n-ary Fig S8 MUX tree).
+Dispatch follows the other four kernel ops: Pallas kernel where it compiles,
+bit-exact jnp reference as the CPU production fallback.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+from repro.kernels import backend
+from repro.kernels.node_mux.kernel import node_mux_pallas
+from repro.kernels.node_mux.ref import node_mux_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "use_kernel", "interpret"))
+def node_mux(
+    key: jax.Array,
+    cpt: jnp.ndarray,
+    parents: jnp.ndarray,
+    n_bits: int = 128,
+    *,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Lower one network node to its packed stream.
+
+    cpt:     (..., L) CPT rows P(node=1 | parent assignment), L = 2**m, row
+             index with the FIRST parent as the most significant bit.
+    parents: (m, ..., n_words) packed parent streams (leading dims match cpt).
+    Returns (..., n_words) uint32.  n_bits must be a multiple of 32.  Each CPT
+    row draws independent counter-based entropy from ``key`` (one SNE per row),
+    so the node's bits are conditionally independent given the parents' bits --
+    the exact joint-sampling semantics of the network.
+    """
+    assert n_bits % 32 == 0, "kernel path consumes whole uint32 entropy words"
+    interpret = backend.resolve_interpret(interpret)
+    use_kernel = backend.resolve_use_kernel(use_kernel, interpret)
+    cpt = jnp.asarray(cpt, jnp.float32)
+    m = parents.shape[0]
+    l = cpt.shape[-1]
+    assert l == 1 << m, f"{l} CPT rows for {m} parents"
+    lead = cpt.shape[:-1]
+    w = n_bits // 32
+    assert parents.shape == (m,) + lead + (w,), (parents.shape, lead)
+    flat_cpt = cpt.reshape(-1, l)
+    flat_par = parents.reshape(m, -1, w)
+    rows = flat_cpt.shape[0]
+    rand = rng.counter_hash_words(key, (rows, l), n_bits // 4)
+    if use_kernel:
+        block = backend.pick_block(rows, 256)
+        out = node_mux_pallas(flat_cpt, rand, flat_par, block_r=block, interpret=interpret)
+    else:
+        out = node_mux_ref(flat_cpt, rand, flat_par)
+    return out.reshape(lead + (w,))

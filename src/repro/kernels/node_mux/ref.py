@@ -1,0 +1,28 @@
+"""jnp reference for the node-MUX sweep (the CPU production fallback).
+
+A Bayesian-network node's packed stream is: encode the ``2**m`` CPT rows as
+independent packed streams (byte-threshold comparators, same scheme as
+``sne_encode``), then route each bit position through the value-select MUX tree
+keyed by the parents' bits at that position.  This reference composes the core
+packed primitives; XLA fuses it well on CPU, and the Pallas kernel reproduces
+it bit-exactly from the same entropy words.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import logic, rng
+
+
+def node_mux_ref(
+    cpt: jnp.ndarray, rand: jnp.ndarray, parents: jnp.ndarray
+) -> jnp.ndarray:
+    """cpt (R, L) f32, rand (R, L, n_rand) u32, parents (m, R, W) u32 -> (R, W).
+
+    L = 2**m; output word count W = n_rand // 8 (8 entropy words per packed
+    output word).  CPT row index convention: first parent = most significant
+    bit (spec.py / Fig S8 ordering).
+    """
+    leaves = rng.packed_from_bytes(rand, rng.threshold_from_p(cpt))  # (R, L, W)
+    return logic.mux_select(parents, leaves)

@@ -151,8 +151,10 @@ def _moe_local(params, x: jnp.ndarray, cfg, local_experts: bool = False):
         else:
             ids_here = ids
         cap = int(e.capacity_factor * k * t / e.num_experts)
-        # small-T floor (decode steps): room for every assignment, bounded at 16
-        cap = max(cap, min(t * k, 16))
+        # small-T floor (decode steps, smoke-scale prefill): below 64 assignments
+        # run dropless, so keep/drop never depends on the sequence length and
+        # prefill(t-1) stays bit-consistent with teacher-forced forward(t)
+        cap = max(cap, min(t * k, 64))
         flat_ids = jnp.clip(ids_here.reshape(-1), -1, e_local)   # (T*k,)
         oob = (flat_ids < 0) | (flat_ids >= e_local)
         flat_ids = jnp.where(oob, e_local, flat_ids)             # overflow row

@@ -32,6 +32,7 @@ class Request:
     out_tokens: Optional[list] = None
     confidences: Optional[list] = None
     done: bool = False
+    admit_step: int = -1               # engine step at which a slot was granted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,25 +59,64 @@ class ServeEngine:
             lambda batch: api.prefill(params, model_cfg, batch, engine_cfg.t_cache)
         )
         self.slots: List[Optional[Request]] = [None] * engine_cfg.max_batch
+        self.pending: List[Request] = []   # admission queue (continuous batching)
         self.state = None
         self.pos = 0
+        self.step_count = 0
 
     # ------------------------------------------------------------- admission
     def add_requests(self, requests: List[Request]):
+        """Admit into free slots; overflow waits in the pending queue.
+
+        Queued requests are granted slots as decodes complete (``step`` calls
+        ``_admit_pending`` after freeing slots) -- true continuous batching:
+        submission never fails, admission happens at step granularity.
+        """
         for r in requests:
-            free = [i for i, s in enumerate(self.slots) if s is None]
-            if not free:
-                raise RuntimeError("no free slots (continuous batching full)")
             r.out_tokens, r.confidences = [], []
-            self.slots[free[0]] = r
+            self.pending.append(r)
+        if self.state is None:
+            # before the first prefill, slots can be granted directly -- the
+            # caller's prefill_all() encodes them.  Mid-flight, a slot grant
+            # must come with a cache refresh, so step() handles admission.
+            self._fill_free_slots()
+
+    def _fill_free_slots(self) -> bool:
+        """Move pending requests into free slots; True if any were admitted."""
+        admitted = False
+        for i, s in enumerate(self.slots):
+            if s is None and self.pending:
+                r = self.pending.pop(0)
+                r.admit_step = self.step_count
+                self.slots[i] = r
+                admitted = True
+        return admitted
+
+    def _admit_pending(self):
+        """Grant freed slots to queued requests and (re)prefill the batch.
+
+        Mid-flight admission re-encodes every active slot's prompt plus the
+        tokens it has generated so far (recompute-style admission: one prefill
+        refreshes the whole cache with the newcomer in place), then decoding
+        continues for all slots from the refreshed logits.
+        """
+        if not self._fill_free_slots():
+            return None
+        return self.prefill_all()
 
     def _batch_prompts(self) -> Dict[str, jnp.ndarray]:
-        lens = [len(s.prompt) for s in self.slots if s is not None]
-        maxlen = max(lens)
+        # active context per slot = prompt + tokens generated so far
+        ctx = [
+            None if s is None else np.concatenate(
+                [np.asarray(s.prompt, np.int32), np.asarray(s.out_tokens, np.int32)]
+            )
+            for s in self.slots
+        ]
+        maxlen = max(len(c) for c in ctx if c is not None)
         toks = np.zeros((self.ecfg.max_batch, maxlen), np.int32)
-        for i, s in enumerate(self.slots):
-            if s is not None:
-                toks[i, maxlen - len(s.prompt):] = s.prompt   # left-pad
+        for i, c in enumerate(ctx):
+            if c is not None:
+                toks[i, maxlen - len(c):] = c                 # left-pad
         return {"tokens": jnp.asarray(toks)}
 
     # ---------------------------------------------------------------- serve
@@ -110,6 +150,7 @@ class ServeEngine:
             ok = jnp.ones_like(token, bool)
         logits, self.state = self._decode(token, self.state, jnp.int32(self.pos))
         self.pos += 1
+        self.step_count += 1
 
         out = {}
         tok_np, conf_np, ok_np = np.asarray(token), np.asarray(conf), np.asarray(ok)
@@ -122,16 +163,21 @@ class ServeEngine:
             if len(s.out_tokens) >= s.max_new_tokens:
                 s.done = True
                 self.slots[i] = None     # free the slot (continuous batching)
+        if self.pending and any(s is None for s in self.slots):
+            refreshed = self._admit_pending()
+            if refreshed is not None:
+                logits = refreshed       # newcomers decode from the refreshed batch
         return logits, out
 
     def run(self, key, requests: List[Request], max_steps: int | None = None):
-        """Convenience driver: admit, prefill, decode until all done."""
+        """Convenience driver: admit (queueing overflow), decode until all done."""
         self.add_requests(requests)
         logits = self.prefill_all()
-        steps = max_steps or max(r.max_new_tokens for r in requests)
+        active = [s for s in self.slots if s is not None] + self.pending
+        steps = max_steps or sum(r.max_new_tokens for r in active)
         for t in range(steps):
             key, sub = jax.random.split(key)
             logits, _ = self.step(sub, logits)
-            if all(s is None for s in self.slots):
+            if all(s is None for s in self.slots) and not self.pending:
                 break
         return requests

@@ -1,0 +1,61 @@
+"""Spec validation: CPT shapes, DAG checks, topological order."""
+
+import pytest
+
+from repro.bayesnet.spec import NetworkSpec, Node, chain
+
+
+def test_topo_order_respects_edges():
+    spec = NetworkSpec(
+        name="t",
+        nodes=(
+            Node("c", ("a", "b"), (0.1, 0.2, 0.3, 0.4)),
+            Node("a", (), (0.5,)),
+            Node("b", ("a",), (0.2, 0.8)),
+        ),
+    )
+    order = spec.topo_order()
+    assert order.index("a") < order.index("b") < order.index("c")
+    assert spec.roots() == ("a",)
+    assert spec.max_fan_in() == 2
+
+
+def test_cpt_length_must_match_fan_in():
+    with pytest.raises(ValueError, match="CPT rows"):
+        Node("x", ("a", "b"), (0.1, 0.2))
+
+
+def test_cpt_probabilities_bounded():
+    with pytest.raises(ValueError, match="outside"):
+        Node("x", (), (1.5,))
+
+
+def test_unknown_parent_rejected():
+    with pytest.raises(ValueError, match="unknown parent"):
+        NetworkSpec(name="t", nodes=(Node("x", ("ghost",), (0.1, 0.9)),))
+
+
+def test_cycle_rejected():
+    with pytest.raises(ValueError, match="cycle"):
+        NetworkSpec(
+            name="t",
+            nodes=(Node("a", ("b",), (0.1, 0.9)), Node("b", ("a",), (0.2, 0.8))),
+        )
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        NetworkSpec(name="t", nodes=(Node("a"), Node("a")))
+
+
+def test_unknown_evidence_rejected():
+    with pytest.raises(ValueError, match="evidence/query"):
+        NetworkSpec(name="t", nodes=(Node("a"),), evidence=("b",))
+
+
+def test_chain_builder():
+    spec = chain("c3", [0.3], [(0.9, 0.2), (0.8, 0.1)])
+    assert spec.n_nodes == 3
+    assert spec.topo_order() == ("x0", "x1", "x2")
+    # cpt index 1 = parent value 1
+    assert spec.node("x1").cpt == (0.2, 0.9)

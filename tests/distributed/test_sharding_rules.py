@@ -11,14 +11,11 @@ from repro.models import api
 
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
-    devs = np.empty(shape, dtype=object)
-    it = np.nditer(devs, flags=["refs_ok", "multi_index"])
-    # build a fake mesh without devices: use Mesh with abstract devices is not
-    # supported -> use the single CPU device repeated is invalid; instead use
-    # jax.sharding.AbstractMesh for spec computation.
+    # Spec computation needs no real devices: AbstractMesh takes
+    # ((name, size), ...) pairs and exposes axis_names/axis_sizes/shape.
     from jax.sharding import AbstractMesh
 
-    return AbstractMesh(shape, axes)
+    return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_param_specs_qwen_rules():

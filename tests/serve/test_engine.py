@@ -41,6 +41,53 @@ def test_engine_frees_slots(engine_setup):
     assert all(s is None for s in eng.slots)
 
 
+def test_pending_queue_admits_as_slots_free(engine_setup):
+    """Oversubmitted requests queue (no RuntimeError) and are admitted
+    mid-flight as decodes complete -- not in waves after the batch drains."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=2, t_cache=64))
+    reqs = [
+        Request(rid=0, prompt=np.arange(4), max_new_tokens=8),
+        Request(rid=1, prompt=np.arange(5), max_new_tokens=2),
+        Request(rid=2, prompt=np.arange(3), max_new_tokens=2),
+        Request(rid=3, prompt=np.arange(4), max_new_tokens=2),
+    ]
+    eng.add_requests(reqs)
+    assert eng.pending and len([s for s in eng.slots if s is not None]) == 2
+    out = eng.run(jax.random.PRNGKey(0), [])
+    del out
+    for r in reqs:
+        assert r.done and len(r.out_tokens) == r.max_new_tokens, r.rid
+    assert not eng.pending and all(s is None for s in eng.slots)
+    # rid=1 frees its slot at step 2; rid=2 must be admitted then, while rid=0
+    # (8 tokens) is still decoding -- continuous batching, not wave batching.
+    assert reqs[2].admit_step == 2, reqs[2].admit_step
+    assert reqs[3].admit_step == 4, reqs[3].admit_step
+
+
+def test_midflight_add_requests_gets_prefilled(engine_setup):
+    """A request added while the engine is decoding must not seize a free slot
+    without a cache refresh -- step() admits it with a re-prefill."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=2, t_cache=64))
+    r0 = Request(rid=0, prompt=np.arange(4), max_new_tokens=6)
+    eng.add_requests([r0])
+    logits = eng.prefill_all()
+    key = jax.random.PRNGKey(0)
+    key, sub = jax.random.split(key)
+    logits, _ = eng.step(sub, logits)
+    # engine mid-flight with a free slot; late arrival must wait for step()
+    late = Request(rid=1, prompt=np.arange(5), max_new_tokens=3)
+    eng.add_requests([late])
+    assert eng.pending and late.admit_step == -1
+    while any(s is not None for s in eng.slots) or eng.pending:
+        key, sub = jax.random.split(key)
+        logits, _ = eng.step(sub, logits)
+    # admitted at the very next step (slot was already free), fully decoded
+    assert late.admit_step == 2 and late.done
+    assert len(late.out_tokens) == 3 and len(r0.out_tokens) == 6
+
+
 def test_bayes_gate_vs_greedy(engine_setup):
     cfg, params = engine_setup
     eng = ServeEngine(cfg, params, EngineConfig(max_batch=1, t_cache=64, bayes_gate=False))
