@@ -1,11 +1,18 @@
-"""Bayesnet compiler throughput: frames/sec vs network size.
+"""Bayesnet compiler throughput: frames/sec vs network size and entropy mode.
 
-Each scenario network is compiled once (shared-entropy packed program,
-``estimator='ratio'``) and timed over a 1024-frame evidence batch in a single
-jit launch; the derived column records frames/sec, node count and fan-in so
-the BENCH_*.json trajectory tracks how scenario scale affects the hot path.
-The independent-entropy mode is timed once as the costed upper bound (fresh
-joint sample per frame).
+Every scenario network is timed over a 1024-frame evidence batch in a single
+jit launch, in BOTH entropy modes:
+
+* shared entropy (``share_entropy=True``): node streams built once, every
+  frame conditions the same joint sample -- the cheap-but-correlated mode.
+* independent entropy (the production default): every frame draws its own
+  joint sample through the fused ``net_sweep`` lowering.
+
+The derived column of each ``_indep_`` row records the shared/indep throughput
+ratio, so the cost of per-frame independence is tracked for every scenario in
+every future ``BENCH_*.json`` (the committed trajectory once showed a ~70x
+cliff here; the fused sweep holds it to low single digits, and CI's
+bench-smoke gate fails if the pedestrian-night ratio regresses past 8x).
 """
 
 from __future__ import annotations
@@ -16,18 +23,21 @@ from benchmarks import common
 
 N_FRAMES = 1024
 N_BITS = 4096
+SCENARIO_NAMES = ("sensor-degradation", "pedestrian-night", "intersection")
 
 
 def run() -> None:
     from repro.bayesnet import by_name, compile_network, sample_evidence
 
     key = jax.random.PRNGKey(0)
-    for name in ("sensor-degradation", "pedestrian-night", "intersection"):
+    shared_fps = {}
+    for name in SCENARIO_NAMES:
         spec = by_name(name)
-        net = compile_network(spec, n_bits=N_BITS)
+        net = compile_network(spec, n_bits=N_BITS, share_entropy=True)
         ev = sample_evidence(spec, jax.random.PRNGKey(1), N_FRAMES)
         us = common.timeit(lambda n=net, e=ev: n.run(key, e))
         fps = N_FRAMES / (us / 1e6)
+        shared_fps[name] = fps
         common.emit(
             f"bayesnet_{name}_batch{N_FRAMES}",
             us,
@@ -35,16 +45,19 @@ def run() -> None:
             f"n_bits {N_BITS}",
         )
 
-    # independent entropy: every frame draws its own joint sample
-    spec = by_name("pedestrian-night")
-    net = compile_network(spec, n_bits=N_BITS, share_entropy=False)
-    ev = sample_evidence(spec, jax.random.PRNGKey(1), N_FRAMES)
-    us = common.timeit(lambda: net.run(key, ev))
-    common.emit(
-        f"bayesnet_pedestrian-night_indep_batch{N_FRAMES}",
-        us,
-        f"{N_FRAMES / (us / 1e6):,.0f} frames/s | fresh entropy per frame",
-    )
+    # independent entropy: every frame draws its own joint sample (fused sweep)
+    for name in SCENARIO_NAMES:
+        spec = by_name(name)
+        net = compile_network(spec, n_bits=N_BITS, share_entropy=False)
+        ev = sample_evidence(spec, jax.random.PRNGKey(1), N_FRAMES)
+        us = common.timeit(lambda n=net, e=ev: n.run(key, e))
+        fps = N_FRAMES / (us / 1e6)
+        common.emit(
+            f"bayesnet_{name}_indep_batch{N_FRAMES}",
+            us,
+            f"{fps:,.0f} frames/s | fresh entropy per frame | "
+            f"shared/indep ratio {shared_fps[name] / fps:.2f}x",
+        )
 
 
 if __name__ == "__main__":

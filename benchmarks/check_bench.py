@@ -1,0 +1,49 @@
+"""Bench-smoke regression gates over a freshly written ``BENCH_*.json``.
+
+The first gate pins the independent-entropy cliff: per-frame joint samples
+(the production mode, what the physical memristor array provides for free)
+must stay within ``MAX_INDEP_RATIO`` of the shared-entropy launch for the
+8-node pedestrian-night network.  The committed trajectory once showed ~70x
+here; the fused ``net_sweep`` lowering holds it to low single digits, and this
+gate keeps the cliff from silently regressing.
+
+Usage: ``python benchmarks/check_bench.py BENCH_<ts>.json`` (CI runs it right
+after the bench-smoke step writes the snapshot), or call :func:`check` with
+the path from the same process.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+MAX_INDEP_RATIO = 8.0
+_SHARED = "bayesnet_pedestrian-night_batch1024"
+_INDEP = "bayesnet_pedestrian-night_indep_batch1024"
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        data = json.load(f)
+    missing = [k for k in (_SHARED, _INDEP) if k not in data]
+    if missing:
+        raise SystemExit(f"{path}: missing bench rows {missing}")
+    shared_us = float(data[_SHARED]["us_per_call"])
+    indep_us = float(data[_INDEP]["us_per_call"])
+    ratio = indep_us / shared_us
+    print(
+        f"independent-entropy gate: {indep_us:,.0f} us vs {shared_us:,.0f} us "
+        f"shared -> ratio {ratio:.2f}x (limit {MAX_INDEP_RATIO:.0f}x)"
+    )
+    if ratio > MAX_INDEP_RATIO:
+        raise SystemExit(
+            f"independent-entropy cliff regressed: indep/shared ratio "
+            f"{ratio:.2f}x exceeds {MAX_INDEP_RATIO:.0f}x "
+            f"({_INDEP} vs {_SHARED} in {path})"
+        )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        raise SystemExit("usage: check_bench.py BENCH_<timestamp>.json")
+    check(sys.argv[1])

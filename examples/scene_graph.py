@@ -40,6 +40,9 @@ print(f"1. Fig S8b as a spec: P(A1|B=1) = {float(post[0, 0]):.3f} "
       f"(analytic {expect:.3f}, {int(acc[0])} accepted bits)")
 
 # 2. An 8-node scenario network, 2048 evidence frames, one jit launch ---------
+# The default lowering is the fused net_sweep: every frame draws an
+# INDEPENDENT joint sample (what the memristor array provides for free),
+# generated in-register -- no entropy tensor ever reaches HBM.
 spec = by_name("pedestrian-night")
 net = compile_network(spec, n_bits=4096)
 ev = sample_evidence(spec, jax.random.PRNGKey(1), 2048)
@@ -49,9 +52,18 @@ t0 = time.perf_counter()
 post, acc = net.run(key, ev)
 jax.block_until_ready(post)
 dt = time.perf_counter() - t0
+shared = compile_network(spec, n_bits=4096, share_entropy=True)
+sp, _ = shared.run(key, ev)
+jax.block_until_ready(sp)
+t0 = time.perf_counter()
+sp, _ = shared.run(key, ev)
+jax.block_until_ready(sp)
+dt_shared = time.perf_counter() - t0
 print(f"2. {spec.name}: {spec.n_nodes} nodes, queries {net.queries}, "
       f"{ev.shape[0]} frames in {dt * 1e3:.2f} ms "
-      f"({ev.shape[0] / dt:,.0f} frames/s on {jax.default_backend()})")
+      f"({ev.shape[0] / dt:,.0f} frames/s on {jax.default_backend()}, "
+      f"independent joint sample per frame; error-correlated shared-entropy "
+      f"launch took {dt_shared / dt:.2f}x as long)")
 
 # 3. Exact enumeration oracle bounds the stochastic backend -------------------
 exact, _ = make_posterior_fn(spec, dac_quantize=True)(ev)
@@ -62,11 +74,11 @@ print(f"3. vs enumeration oracle: mean |err| {err[keep].mean():.4f}, "
       f"(stochastic floor ~{1 / np.sqrt(np.median(np.asarray(acc))):.4f})")
 
 # 4. Streaming frames through serve-style continuous batching -----------------
-drv = FrameDriver(net, max_batch=512)
+drv = FrameDriver(net, max_batch=512, base_key=jax.random.PRNGKey(2))
 night_frame = np.array([1, 0, 1])                # night, no RGB, thermal fires
 day_frame = np.array([0, 1, 1])                  # day, both detectors fire
 drv.submit(night_frame); drv.submit(day_frame)
-out = drv.drain(jax.random.PRNGKey(2))
+out = drv.drain()                                # driver sequences launch keys
 q = net.queries.index("pedestrian")
 print(f"4. streamed frames: P(pedestrian | night, thermal-only) = {out[0][0][q]:.3f}, "
       f"P(pedestrian | day, both) = {out[1][0][q]:.3f}")

@@ -2,14 +2,19 @@
 stochastic domain (DESIGN.md SS8).
 
     spec.py       NetworkSpec / Node -- the source language
-    compile.py    lowering to rng/node_mux/cordiv packed programs (jit + vmap)
+    compile.py    lowering: fused net_sweep (production) or per-node
+                  rng/node_mux/cordiv packed programs (verification baseline)
     analytic.py   exact enumeration oracle + ancestral evidence sampling
     scenarios.py  5-12 node driving networks over data/detection statistics
     driver.py     serve-style continuous batching of evidence frames
 """
 
 from repro.bayesnet.analytic import make_posterior_fn, sample_evidence  # noqa: F401
-from repro.bayesnet.compile import CompiledNetwork, compile_network  # noqa: F401
+from repro.bayesnet.compile import (  # noqa: F401
+    CompiledNetwork,
+    compile_network,
+    sweep_plan,
+)
 from repro.bayesnet.driver import FrameDriver  # noqa: F401
 from repro.bayesnet.scenarios import SCENARIOS, by_name  # noqa: F401
 from repro.bayesnet.spec import NetworkSpec, Node  # noqa: F401

@@ -1,30 +1,44 @@
 """Compile a :class:`~repro.bayesnet.spec.NetworkSpec` to the packed domain.
 
-Lowering (one pass over the topological order):
+Two lowerings share the spec language:
+
+**Fused** (production default for independent entropy): the whole network --
+per-node threshold-gather sampling, evidence-indicator AND, CORDIV popcount
+fixed point -- becomes ONE :func:`~repro.kernels.net_sweep.net_sweep` launch.
+Entropy is generated in-register from counter bit-planes with the frame index
+folded into the counters, so every frame draws an independent joint sample
+(exactly what the physical memristor array provides for free) and node
+streams never touch HBM.  This is what closed the former ~70x
+``share_entropy=False`` cliff.
+
+**Unfused** (one op per node; the verification baseline, and the only path
+for shared entropy or the ``fill`` estimator):
 
 * root nodes      -> independent packed Bernoulli streams (``rng.encode_packed``,
   the counter-entropy SNE).
-* non-root nodes  -> the :func:`~repro.kernels.node_mux.node_mux` sweep: the
-  ``2**m`` CPT rows are encoded with fresh entropy and routed through the
-  value-select MUX tree keyed by the parents' packed streams.  At every bit
-  position the vector of all node bits is then an exact joint sample of the
-  network -- the n-ary generalisation of the Fig S8 motifs.
+* non-root nodes  -> the :func:`~repro.kernels.node_mux.node_mux` sweep.  The
+  default ``mux_mode='gather'`` selects the node's 8-bit DAC threshold by the
+  parents' packed bits and compares one entropy byte per stream bit;
+  ``mux_mode='rows'`` is the original formulation (fresh entropy per CPT row
+  routed through the value-select MUX tree) kept as the statistical baseline.
+  Either way, at every bit position the vector of all node bits is an exact
+  joint sample of the network -- the n-ary generalisation of the Fig S8
+  motifs.
 * queries         -> stochastic conditioning: the evidence indicator streams
   (a node stream, or its packed NOT for evidence value 0) are ANDed into the
   acceptance stream ``d``; each query's numerator is ``d AND S_q``, a bitwise
   subset of ``d`` by construction, so CORDIV's correlation discipline holds
   with no superset completion.  ``estimator='ratio'`` uses the closed-form
-  ``cordiv_ratio`` popcount fixed point (the production path);
-  ``estimator='fill'`` runs the word-parallel ``cordiv_fill`` flip-flop
-  circuit (bit-faithful to the serial divider).
+  ``cordiv_ratio`` popcount fixed point; ``estimator='fill'`` runs the
+  word-parallel ``cordiv_fill`` flip-flop circuit (bit-faithful to the serial
+  divider).
 
-The compiled program is one jitted function, ``vmap``-batched over evidence
-frames.  With ``share_entropy=True`` (default) the node streams are built once
-per launch and every frame conditions the *same* joint sample -- per-frame
-posteriors stay unbiased and thousands of frames cost little more than one.
-``share_entropy=False`` folds the frame index into the entropy counters so
-every frame gets an independent joint sample (independent errors across
-frames, ~B x the encode work).
+The compiled program is one jitted function.  ``share_entropy=False`` (the
+default) gives every frame an independent joint sample -- independent errors
+across frames, the mode a deployment should run.  ``share_entropy=True``
+builds the node streams once per launch and every frame conditions the *same*
+joint sample: cheaper still for huge batches, but frame errors are maximally
+correlated.
 """
 
 from __future__ import annotations
@@ -37,7 +51,13 @@ import jax.numpy as jnp
 
 from repro.bayesnet.spec import NetworkSpec
 from repro.core import bitops, cordiv, rng
+from repro.kernels.net_sweep import SweepPlan, net_sweep
 from repro.kernels.node_mux.ops import node_mux
+
+
+def _posterior_from_counts(numer: jnp.ndarray, denom: jnp.ndarray) -> jnp.ndarray:
+    """Per-frame posteriors from count arrays: numer (B, n_q), denom (B,)."""
+    return cordiv.ratio_from_counts(numer, denom[:, None])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +77,7 @@ class CompiledNetwork:
     n_bits: int
     share_entropy: bool
     estimator: str
+    fused: bool
     _run: Callable = dataclasses.field(repr=False)
 
     def run(self, key: jax.Array, ev_frames) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -68,21 +89,47 @@ class CompiledNetwork:
         return self._run(key, ev)
 
 
+def sweep_plan(
+    spec: NetworkSpec,
+    queries: Sequence[str],
+    evidence: Sequence[str],
+) -> SweepPlan:
+    """Lower a spec to the static :class:`SweepPlan` the fused kernel consumes.
+
+    Nodes are renumbered into topological order; thresholds are the 8-bit DAC
+    comparator values (``round(p * 256)``, the same grid every other encoder
+    uses), so the fused sweep samples the identical quantised network.
+    """
+    order = spec.topo_order()
+    index = {name: i for i, name in enumerate(order)}
+    nodes = []
+    for name in order:
+        node = spec.node(name)
+        thresh = tuple(rng.threshold_int(p) for p in node.cpt)
+        nodes.append((tuple(index[p] for p in node.parents), thresh))
+    return SweepPlan(
+        nodes=tuple(nodes),
+        evidence=tuple(index[e] for e in evidence),
+        queries=tuple(index[q] for q in queries),
+    )
+
+
 def lower_streams(
     spec: NetworkSpec,
     key: jax.Array,
     n_bits: int,
     batch: int | None = None,
     *,
+    mux_mode: str = "gather",
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ):
     """One topological sweep: name -> packed stream ((W,) or (B, W)).
 
-    The per-node subkey comes from ``fold_in(key, node index)``, so every CPT
-    row of every node draws disjoint counter entropy while parents' streams are
-    shared by all their children exactly once -- the correlation structure the
-    joint sample requires.
+    The per-node subkey comes from ``fold_in(key, node index)``, so every node
+    draws disjoint counter entropy while parents' streams are shared by all
+    their children exactly once -- the correlation structure the joint sample
+    requires.
     """
     order = spec.topo_order()
     streams = {}
@@ -100,7 +147,7 @@ def lower_streams(
                 cpt = jnp.broadcast_to(cpt, (batch,) + cpt.shape)
             parents = jnp.stack([streams[pn] for pn in node.parents])
             streams[name] = node_mux(
-                sub, cpt, parents, n_bits,
+                sub, cpt, parents, n_bits, mode=mux_mode,
                 use_kernel=use_kernel, interpret=interpret,
             )
     return streams
@@ -112,12 +159,20 @@ def compile_network(
     queries: Sequence[str] | None = None,
     evidence: Sequence[str] | None = None,
     *,
-    share_entropy: bool = True,
+    share_entropy: bool = False,
     estimator: str = "ratio",
+    fused: bool | None = None,
+    mux_mode: str = "gather",
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ) -> CompiledNetwork:
-    """Lower ``spec`` to a jitted, frame-batched packed-stochastic program."""
+    """Lower ``spec`` to a jitted, frame-batched packed-stochastic program.
+
+    ``fused=None`` auto-selects: the one-launch ``net_sweep`` path whenever it
+    applies (independent entropy + ratio estimator -- the production mode),
+    the per-node unfused path otherwise.  ``fused=False`` forces the unfused
+    program, the statistical verification baseline for the fused kernel.
+    """
     queries = tuple(queries if queries is not None else spec.queries)
     evidence = tuple(evidence if evidence is not None else spec.evidence)
     if not queries:
@@ -126,7 +181,38 @@ def compile_network(
         raise ValueError(f"unknown estimator {estimator!r}")
     if n_bits % 32:
         raise ValueError("n_bits must be a multiple of 32 (packed words)")
+    if mux_mode not in ("gather", "rows"):
+        raise ValueError(f"unknown mux_mode {mux_mode!r}")
+    # The fused sweep samples with threshold-gather by construction, so a
+    # non-default mux_mode is an explicit request for the unfused per-node
+    # lowering -- auto-resolution honours it instead of silently ignoring it.
+    fusable = not share_entropy and estimator == "ratio" and mux_mode == "gather"
+    if fused is None:
+        fused = fusable
+    elif fused and not fusable:
+        raise ValueError(
+            "fused lowering requires share_entropy=False, estimator='ratio' "
+            f"and mux_mode='gather' (got share_entropy={share_entropy}, "
+            f"estimator={estimator!r}, mux_mode={mux_mode!r})"
+        )
     mask = bitops.pad_mask(n_bits)
+
+    if fused:
+        plan = sweep_plan(spec, queries, evidence)
+
+        @jax.jit
+        def _run(key, ev_frames):
+            numer, denom = net_sweep(
+                key, ev_frames, plan=plan, n_bits=n_bits,
+                use_kernel=use_kernel, interpret=interpret,
+            )
+            return _posterior_from_counts(numer, denom), denom
+
+        return CompiledNetwork(
+            spec=spec, queries=queries, evidence=evidence, n_bits=n_bits,
+            share_entropy=share_entropy, estimator=estimator, fused=True,
+            _run=_run,
+        )
 
     def one_frame(ev, ev_streams, q_streams):
         """ev (n_ev,), ev_streams (n_ev, W), q_streams (n_q, W)."""
@@ -136,22 +222,46 @@ def compile_network(
             ind = ev_streams[i] ^ jnp.where(ev[i] == 1, jnp.uint32(0), mask)
             denom = denom & ind
         numer = q_streams & denom[None, :]
-        if estimator == "fill":
-            _, post = cordiv.cordiv_fill(numer, denom[None, :], n_bits)
-        else:
-            post = cordiv.cordiv_ratio(numer, denom[None, :])
+        _, post = cordiv.cordiv_fill(numer, denom[None, :], n_bits)
         return post, bitops.popcount(denom)
+
+    def ratio_batched(ev_frames, ev_s, q_s):
+        """Straight-line batched conditioning for the ratio estimator.
+
+        Computes ``cordiv_ratio`` -- popcount(numer) / popcount(denom) over
+        the same acceptance stream ``one_frame`` builds -- with indicators
+        broadcast across the frame axis instead of per-frame ``vmap``
+        closures (~1.4x faster).  ev_s/q_s are (n, W) shared or (n, B, W)
+        independent streams.
+        """
+        b = ev_frames.shape[0]
+        accept = jnp.broadcast_to(mask, (b, mask.shape[0]))
+        for i in range(len(evidence)):
+            s = ev_s[i] if ev_s[i].ndim == 2 else ev_s[i][None, :]
+            ind = s ^ jnp.where(ev_frames[:, i : i + 1] == 1, jnp.uint32(0), mask[None, :])
+            accept = accept & ind
+        denom = bitops.popcount(accept)
+        numer = jnp.stack(
+            [
+                bitops.popcount(accept & (q if q.ndim == 2 else q[None, :]))
+                for q in q_s
+            ],
+            axis=-1,
+        )
+        return _posterior_from_counts(numer, denom), denom
 
     @jax.jit
     def _run(key, ev_frames):
         b = ev_frames.shape[0]
         streams = lower_streams(
             spec, key, n_bits, batch=None if share_entropy else b,
-            use_kernel=use_kernel, interpret=interpret,
+            mux_mode=mux_mode, use_kernel=use_kernel, interpret=interpret,
         )
         ev_s = jnp.stack([streams[e] for e in evidence]) if evidence else \
             jnp.zeros((0,) + next(iter(streams.values())).shape, jnp.uint32)
         q_s = jnp.stack([streams[q] for q in queries])
+        if estimator == "ratio":
+            return ratio_batched(ev_frames, ev_s, q_s)
         if share_entropy:
             return jax.vmap(one_frame, in_axes=(0, None, None))(ev_frames, ev_s, q_s)
         # independent entropy: streams carry a leading frame axis
@@ -161,5 +271,6 @@ def compile_network(
 
     return CompiledNetwork(
         spec=spec, queries=queries, evidence=evidence, n_bits=n_bits,
-        share_entropy=share_entropy, estimator=estimator, _run=_run,
+        share_entropy=share_entropy, estimator=estimator, fused=False,
+        _run=_run,
     )

@@ -6,6 +6,18 @@ packs up to ``max_batch`` of them -- padding the tail with the last real frame
 so the jit launch keeps one static shape -- runs the compiled program once,
 and returns per-request posteriors.  One compile, one launch shape, arbitrary
 arrival pattern: the continuous-batching contract.
+
+With the fused independent-entropy default (``compile_network``'s production
+mode) every frame in a launch carries its own joint sample, so batch-mates
+never share errors -- the padding frames simply burn a little extra entropy.
+The driver also sequences launch keys itself: pass ``key=None`` to ``step`` /
+``drain`` and each launch folds a monotonically increasing launch counter into
+the driver's base key, so successive launches draw disjoint entropy without
+the caller threading PRNG state.  The default base key is ``PRNGKey(0)`` --
+deterministic by design (replayable launches, like every other default key in
+this repo) -- so deployments running several drivers, or restarting one, must
+pass distinct ``base_key`` values or the drivers will draw bit-identical
+joint samples per launch index.
 """
 
 from __future__ import annotations
@@ -20,11 +32,18 @@ from repro.bayesnet.compile import CompiledNetwork
 
 
 class FrameDriver:
-    def __init__(self, net: CompiledNetwork, max_batch: int = 256):
+    def __init__(
+        self,
+        net: CompiledNetwork,
+        max_batch: int = 256,
+        base_key: jax.Array | None = None,
+    ):
         self.net = net
         self.max_batch = int(max_batch)
         self._queue: deque = deque()
         self._next_rid = 0
+        self._base_key = base_key if base_key is not None else jax.random.PRNGKey(0)
+        self._launches = 0
 
     # ------------------------------------------------------------- admission
     def submit(self, frames) -> List[int]:
@@ -46,15 +65,23 @@ class FrameDriver:
         return len(self._queue)
 
     # ----------------------------------------------------------------- serve
-    def step(self, key: jax.Array) -> Dict[int, Tuple[np.ndarray, int]]:
+    def _next_key(self) -> jax.Array:
+        key = jax.random.fold_in(self._base_key, self._launches)
+        self._launches += 1
+        return key
+
+    def step(self, key: jax.Array | None = None) -> Dict[int, Tuple[np.ndarray, int]]:
         """Run one batched launch over up to ``max_batch`` queued frames.
 
         Returns {rid: (posteriors (n_q,), accepted bit count)}.  The launch
         shape is always (max_batch, n_ev): short batches are padded by
         repeating the final frame, and the padded rows' results are dropped.
+        ``key=None`` uses the driver's own launch-counter key sequence.
         """
         if not self._queue:
             return {}
+        if key is None:
+            key = self._next_key()
         taken = [self._queue.popleft() for _ in range(min(self.max_batch, len(self._queue)))]
         ev = np.stack([row for _, row in taken])
         n_real = ev.shape[0]
@@ -68,10 +95,13 @@ class FrameDriver:
             for i, (rid, _) in enumerate(taken)
         }
 
-    def drain(self, key: jax.Array) -> Dict[int, Tuple[np.ndarray, int]]:
+    def drain(self, key: jax.Array | None = None) -> Dict[int, Tuple[np.ndarray, int]]:
         """Step until the queue is empty; returns all results keyed by rid."""
         out: Dict[int, Tuple[np.ndarray, int]] = {}
         while self._queue:
-            key, sub = jax.random.split(key)
+            if key is None:
+                sub = None
+            else:
+                key, sub = jax.random.split(key)
             out.update(self.step(sub))
         return out

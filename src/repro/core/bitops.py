@@ -10,6 +10,7 @@ which keeps ``popcount`` exact.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 WORD = 32
@@ -52,12 +53,12 @@ def unpack_bits(words: jnp.ndarray, n_bits: int) -> jnp.ndarray:
 
 
 def popcount_words(words: jnp.ndarray) -> jnp.ndarray:
-    """SWAR popcount per uint32 word (returns uint32 of same shape)."""
-    x = words.astype(jnp.uint32)
-    x = x - ((x >> 1) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
-    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    return (x * jnp.uint32(0x01010101)) >> 24
+    """Popcount per uint32 word (returns uint32 of same shape).
+
+    ``lax.population_count`` lowers to the native instruction; the Pallas
+    kernels keep their in-register SWAR sequence, which is bit-identical.
+    """
+    return jax.lax.population_count(words.astype(jnp.uint32))
 
 
 def popcount(words: jnp.ndarray) -> jnp.ndarray:

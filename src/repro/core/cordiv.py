@@ -109,11 +109,21 @@ def cordiv_fill(numer: jnp.ndarray, denom: jnp.ndarray, n_bits: int):
     return qpacked, bitops.decode(qpacked, n_bits)
 
 
+def ratio_from_counts(numer_count, denom_count) -> jnp.ndarray:
+    """The CORDIV fixed point from popcounts, 0 at 0/0.
+
+    Single home of the zero-denominator convention, shared by
+    :func:`cordiv_ratio` and the count-level consumers (the fused net_sweep
+    lowering) so the two can never diverge.
+    """
+    num = jnp.asarray(numer_count, jnp.float32)
+    den = jnp.asarray(denom_count, jnp.float32)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1.0), 0.0)
+
+
 def cordiv_ratio(numer: jnp.ndarray, denom: jnp.ndarray) -> jnp.ndarray:
     """Closed-form CORDIV fixed point: popcount(n & d) / popcount(d), safe at 0/0."""
-    num = bitops.popcount(numer & denom).astype(jnp.float32)
-    den = bitops.popcount(denom).astype(jnp.float32)
-    return jnp.where(den > 0, num / jnp.maximum(den, 1.0), 0.0)
+    return ratio_from_counts(bitops.popcount(numer & denom), bitops.popcount(denom))
 
 
 def make_superset(key: jax.Array, numer: jnp.ndarray, p_n, p_d, n_bits: int):

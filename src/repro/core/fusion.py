@@ -69,24 +69,27 @@ def bayes_fusion(
     p_modal: jnp.ndarray,
     n_bits: int = 100,
     prior: jnp.ndarray | None = None,
+    impl: str = "fast",
 ) -> FusionTrace:
     """Run the hardware Bayesian fusion operator.
 
     p_modal: (..., M, K).  The M modal streams per class come from parallel SNEs
     (conditional independence, eq (3)); the normalization MUX tree uses fresh
-    selects (Fig S6 requirement).
+    selects (Fig S6 requirement).  ``impl='threefry'`` draws every stream --
+    encoders and MUX-tree selects alike -- from ``jax.random.bits``, keeping
+    the whole operator reproducible against other JAX code.
     """
     p_modal = jnp.asarray(p_modal, jnp.float32)
     m, k = p_modal.shape[-2], p_modal.shape[-1]
     k_enc, k_tree = jax.random.split(key)
     # (..., M, K, n_words) independent streams -- one SNE per (modality, class).
-    s_modal = sne.encode_uncorrelated(k_enc, p_modal, n_bits)
+    s_modal = sne.encode_uncorrelated(k_enc, p_modal, n_bits, impl=impl)
     # Numerator per class: AND across modalities (one-step multiplication).
     numer = s_modal[..., 0, :, :]
     for i in range(1, m):
         numer = bitops.band(numer, s_modal[..., i, :, :])   # (..., K, n_words)
     # Normalization denominator: MUX tree over class numerators -> (1/Kp) sum_j q_j.
-    denom, _ = logic.mux_tree(k_tree, numer, n_bits)        # (..., n_words)
+    denom, _ = logic.mux_tree(k_tree, numer, n_bits, impl=impl)  # (..., n_words)
 
     # Closed-form path: q_c / sum_j q_j  (the 1/Kp scale cancels in the ratio).
     cnt_num = bitops.popcount(numer).astype(jnp.float32)    # (..., K)

@@ -145,7 +145,7 @@ def mux_select(selects: jnp.ndarray, leaves: jnp.ndarray) -> jnp.ndarray:
     return level[..., 0, :]
 
 
-def mux_tree(key, streams: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+def mux_tree(key, streams: jnp.ndarray, n_bits: int, impl: str = "fast") -> jnp.ndarray:
     """Balanced MUX tree over ``streams`` (..., K, n_words) with fresh uniform selects.
 
     Output probability = mean of the K input probabilities (i.e. (1/K) * sum) for
@@ -164,6 +164,6 @@ def mux_tree(key, streams: jnp.ndarray, n_bits: int) -> jnp.ndarray:
         half = level.shape[-2] // 2
         # Fair-coin selects come straight from the packed generator (rng.fair_bits):
         # 1 entropy bit per stream bit, no comparator pass at all.
-        sel = rng.fair_bits(sub, level.shape[:-2] + (half,), n_bits)
+        sel = rng.fair_bits(sub, level.shape[:-2] + (half,), n_bits, impl=impl)
         level = bitops.bmux(sel, level[..., 0::2, :], level[..., 1::2, :])
     return level[..., 0, :], k_pad

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitops
 
@@ -44,16 +45,29 @@ def threshold_from_p(p: jnp.ndarray) -> jnp.ndarray:
     return jnp.clip(jnp.round(p * 256.0), 0.0, 256.0).astype(jnp.uint32)
 
 
+def threshold_int(p: float) -> int:
+    """:func:`threshold_from_p` for one Python float, evaluated at trace time.
+
+    Static lowerings (the fused sweep's :class:`SweepPlan`) bake thresholds in
+    as ints; this is the same grid -- float32 ``p * 256`` is exact in numpy
+    and XLA alike, so half-even rounding agrees bit-for-bit.
+    """
+    return int(np.clip(np.round(np.float32(p) * 256.0), 0.0, 256.0))
+
+
 def n_rand_words(n_bits: int) -> int:
     """uint32 entropy words needed for ``n_bits`` stream bits (word-padded)."""
     return bitops.n_words(n_bits) * RAND_WORDS_PER_OUT_WORD
 
 
-def _seed_words(key: jax.Array) -> jnp.ndarray:
+def seed_words(key: jax.Array) -> jnp.ndarray:
     """Two uint32 seed words from a JAX PRNG key (typed or legacy uint32 pair)."""
     if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
         key = jax.random.key_data(key)
     return key.astype(jnp.uint32).reshape(-1)[:2]
+
+
+_seed_words = seed_words
 
 
 def _lowbias32(x: jnp.ndarray) -> jnp.ndarray:
@@ -66,7 +80,35 @@ def _lowbias32(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
-def counter_hash_words(key: jax.Array, shape: tuple, n_words: int) -> jnp.ndarray:
+def counter_iota(shape: tuple, offset=0) -> jnp.ndarray:
+    """Row-major flattened counters of ``shape`` built from broadcasted iotas.
+
+    Equals ``offset + arange(prod(shape)).reshape(shape)`` (mod 2^32) without
+    ever materialising the flat 1-D intermediate -- each dimension contributes
+    ``iota * stride`` directly at the output shape, so large-batch independent
+    entropy never allocates a giant arange.  ``offset`` may be a Python int or
+    a traced uint32 scalar (kernel tiles pass their global tile origin).
+    """
+    shape = tuple(int(d) for d in shape)
+    off = jnp.asarray(offset, jnp.uint32) if not isinstance(offset, int) else \
+        jnp.uint32(offset & 0xFFFFFFFF)
+    if not shape:
+        return off
+    strides = []
+    stride = 1
+    for dim in reversed(shape):
+        strides.append(stride)
+        stride *= dim
+    ctr = None
+    for axis, s in enumerate(reversed(strides)):
+        term = jax.lax.broadcasted_iota(jnp.uint32, shape, axis) * jnp.uint32(s & 0xFFFFFFFF)
+        ctr = term if ctr is None else ctr + term
+    return ctr + off
+
+
+def counter_hash_words(
+    key: jax.Array, shape: tuple, n_words: int, *, offset=0
+) -> jnp.ndarray:
     """``shape + (n_words,)`` uint32 entropy via double-hashed counters.
 
     The decision hot path is entropy-bound, and Threefry's 20+ rounds dominate
@@ -75,14 +117,44 @@ def counter_hash_words(key: jax.Array, shape: tuple, n_words: int) -> jnp.ndarra
     autocorrelation all within binomial noise at 2^14 bits -- asserted in
     tests) at a fraction of the cost.  Deterministic per key, like
     ``jax.random.bits``.  Not cryptographic -- neither is the memristor.
+
+    ``offset`` shifts the counter block, so disjoint slices of one logical
+    counter space can be drawn piecewise instead of generating (and slicing)
+    the whole tensor.
     """
     kd = _seed_words(key)
-    total = n_words
-    for dim in shape:
-        total *= int(dim)
-    ctr = jnp.arange(total, dtype=jnp.uint32)
-    words = _lowbias32(_lowbias32(ctr ^ kd[0]) ^ kd[1])
-    return words.reshape(tuple(shape) + (n_words,))
+    ctr = counter_iota(tuple(shape) + (n_words,), offset)
+    return _lowbias32(_lowbias32(ctr ^ kd[0]) ^ kd[1])
+
+
+# --- fused counter -> bit-plane entropy (the net_sweep generator) -----------------
+#
+# The fused whole-network sweep consumes entropy as *bit-planes*: for one packed
+# output word, plane ``k`` is a uint32 word whose bit ``j`` is bit ``k`` of the
+# 8-bit comparator byte at stream position ``j``.  Keeping the planes packed lets
+# the byte-vs-threshold comparison run bit-sliced (a borrow chain over 8 words)
+# with no byte extraction and no per-leaf packing.  Generation is two full
+# lowbias32 avalanche rounds per plane word -- the same strength as
+# ``counter_hash_words`` -- but the first round is shared by the 8 planes of an
+# output word and the second round is salted per plane, so a 32-bit-stream word
+# costs 1 + planes hashes instead of 2 x 8.
+
+# Dense, well-spread odd salts (xxhash/murmur/splitmix finalizer constants);
+# XORed into the second keyed round to separate the 8 bit-planes of one word.
+PLANE_SALTS = (
+    0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F, 0x165667B1,
+    0x9E3779B9, 0xFF51AFD7, 0xC4CEB9FE, 0x2545F497,
+)
+
+
+def plane_base(ctr, kd0) -> jnp.ndarray:
+    """First avalanche round over keyed counters, shared by a word's 8 planes."""
+    return _lowbias32(jnp.asarray(ctr, jnp.uint32) ^ kd0)
+
+
+def plane_word(base, kd1, plane: int) -> jnp.ndarray:
+    """Second keyed round: one uint32 word of fair bits for bit-plane ``plane``."""
+    return _lowbias32(base ^ jnp.uint32(PLANE_SALTS[plane]) ^ kd1)
 
 
 def random_words(
@@ -138,10 +210,12 @@ def _mask_tail(words: jnp.ndarray, n_bits: int) -> jnp.ndarray:
     return words
 
 
-def encode_packed(key: jax.Array, p: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+def encode_packed(
+    key: jax.Array, p: jnp.ndarray, n_bits: int, impl: str = "fast"
+) -> jnp.ndarray:
     """Independent packed Bernoulli streams: ``p.shape + (n_words,)`` uint32."""
     p = jnp.asarray(p, jnp.float32)
-    rand = random_words(key, p.shape, n_bits)
+    rand = random_words(key, p.shape, n_bits, impl=impl)
     return _mask_tail(packed_from_bytes(rand, threshold_from_p(p)), n_bits)
 
 
@@ -150,6 +224,7 @@ def encode_packed_correlated(
     p: jnp.ndarray,
     n_bits: int,
     negate: jnp.ndarray | None = None,
+    impl: str = "fast",
 ) -> jnp.ndarray:
     """Packed streams over the trailing axis of ``p`` sharing one entropy source.
 
@@ -159,16 +234,23 @@ def encode_packed_correlated(
     comparator: maximal negative correlation with the non-negated ones.
     """
     p = jnp.asarray(p, jnp.float32)
-    rand = random_words(key, p.shape[:-1] + (1,), n_bits)
+    rand = random_words(key, p.shape[:-1] + (1,), n_bits, impl=impl)
     flip = None if negate is None else jnp.asarray(negate, bool)
     return _mask_tail(packed_from_bytes(rand, threshold_from_p(p), flip), n_bits)
 
 
-def fair_bits(key: jax.Array, shape: tuple, n_bits: int) -> jnp.ndarray:
+def fair_bits(key: jax.Array, shape: tuple, n_bits: int, impl: str = "fast") -> jnp.ndarray:
     """p = 0.5 packed streams straight from the generator (1 entropy bit/stream bit).
 
     MUX-tree selects are always fair coins; drawing the packed words directly
     skips even the byte comparison.  Pad bits are zeroed as usual.
+    ``impl='threefry'`` draws the words from ``jax.random.bits`` instead of the
+    counter-hash generator, so threefry mode stays end-to-end reproducible
+    against other JAX code (the flag used to be silently unavailable here,
+    which broke reproducibility for any circuit with a MUX-tree select).
     """
-    words = counter_hash_words(key, tuple(shape), bitops.n_words(n_bits))
+    if impl == "threefry":
+        words = jax.random.bits(key, tuple(shape) + (bitops.n_words(n_bits),), jnp.uint32)
+    else:
+        words = counter_hash_words(key, tuple(shape), bitops.n_words(n_bits))
     return _mask_tail(words, n_bits)

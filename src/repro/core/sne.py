@@ -58,13 +58,16 @@ def vref_from_p(p: jax.Array, params: MemristorParams = DEFAULT_PARAMS) -> jnp.n
 
 # --- encoders ---------------------------------------------------------------------
 
-def encode_uncorrelated(key: jax.Array, p: jax.Array, n_bits: int) -> jnp.ndarray:
+def encode_uncorrelated(
+    key: jax.Array, p: jax.Array, n_bits: int, impl: str = "fast"
+) -> jnp.ndarray:
     """Encode probabilities ``p`` (any shape) into independent packed streams.
 
     Output shape: ``p.shape + (n_words,)``.  Runs in the packed domain
     (counter-based byte entropy, 8-bit threshold comparator).
+    ``impl='threefry'`` swaps the entropy source for ``jax.random.bits``.
     """
-    return rng.encode_packed(key, p, n_bits)
+    return rng.encode_packed(key, p, n_bits, impl=impl)
 
 
 def encode_correlated(
@@ -72,6 +75,7 @@ def encode_correlated(
     p: jax.Array,
     n_bits: int,
     negate: jax.Array | None = None,
+    impl: str = "fast",
 ) -> jnp.ndarray:
     """Encode ``p`` (shape ``(..., k)``) as ``k`` streams sharing one entropy source.
 
@@ -82,7 +86,7 @@ def encode_correlated(
     ``bit_i = (255 - byte) < t_i`` -- maximal negative correlation with the
     non-negated streams.
     """
-    return rng.encode_packed_correlated(key, p, n_bits, negate=negate)
+    return rng.encode_packed_correlated(key, p, n_bits, negate=negate, impl=impl)
 
 
 def encode_float_reference(key: jax.Array, p: jax.Array, n_bits: int) -> jnp.ndarray:

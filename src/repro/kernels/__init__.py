@@ -9,6 +9,7 @@ TPU/GPU, interpreter only as the CPU fallback.
 from repro.kernels import backend  # noqa: F401
 from repro.kernels.bayes_decide import bayes_decide, bayes_decide_packed, bayes_decide_ref  # noqa: F401
 from repro.kernels.fusion_map import fusion_map, fusion_map_ref  # noqa: F401
-from repro.kernels.node_mux import node_mux, node_mux_ref  # noqa: F401
+from repro.kernels.net_sweep import SweepPlan, net_sweep, net_sweep_ref  # noqa: F401
+from repro.kernels.node_mux import node_mux, node_mux_gather_ref, node_mux_ref  # noqa: F401
 from repro.kernels.pand_popcount import pand_popcount, pand_popcount_ref  # noqa: F401
 from repro.kernels.sne_encode import sne_encode, sne_encode_ref  # noqa: F401

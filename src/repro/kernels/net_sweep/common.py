@@ -1,0 +1,195 @@
+"""Shared bit-sliced sweep body for the fused whole-network op.
+
+``SweepPlan`` is the static (hashable) description of one compiled network:
+per-node parent indices and 8-bit DAC thresholds in topological order, plus
+the evidence/query node sets.  ``sweep_tile`` runs the full topological sweep
+for one ``(frames x words)`` tile and returns the popcount partials -- it is
+the single source of truth for the fused semantics, called on the whole array
+by the jnp reference and per-tile by the Pallas kernel, which makes the two
+bit-identical by construction (the kernel tests then pin the tiling and
+accumulation).
+
+Node sampling is the threshold-gather formulation in bit-sliced form: entropy
+arrives as 8 *bit-planes* per output word (``rng.plane_base`` /
+``rng.plane_word``), the parent-gathered threshold becomes 8 per-plane mask
+words (an OR of parent-literal indicator words for every CPT row whose
+threshold has that bit set -- constant-folded at trace time because the
+thresholds are static), and ``byte < threshold`` runs as a borrow chain over
+the planes.  Planes below the lowest set threshold bit of a node can never
+flip the comparison and are skipped entirely, so a node costs at most
+``1 + planes`` hashes per output word instead of ``2 * 8 * 2**m``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng
+
+# np scalar (not a committed jax array): Pallas kernels cannot close over
+# device constants, and np scalars fold into jaxpr literals.
+_FULL = np.uint32(0xFFFFFFFF)
+
+# Trace-time sentinel: a threshold-bit mask that is all-ones across the tile
+# (every CPT row has this bit set) -- lets the borrow chain drop the AND.
+_ONES = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Static lowering of a binary-DAG network for the fused sweep.
+
+    nodes:    per node (in topological order) a pair ``(parents, thresh)``:
+              ``parents`` are indices of earlier nodes (first parent = most
+              significant CPT row bit), ``thresh`` are the ``2**m`` 8-bit DAC
+              comparator thresholds in ``[0, 256]`` (``rng.threshold_from_p``).
+    evidence: node index per evidence frame column.
+    queries:  node index per posterior output column.
+    """
+
+    nodes: Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]], ...]
+    evidence: Tuple[int, ...]
+    queries: Tuple[int, ...]
+
+    def __post_init__(self):
+        for i, (parents, thresh) in enumerate(self.nodes):
+            if len(thresh) != 1 << len(parents):
+                raise ValueError(
+                    f"node {i}: {len(parents)} parents need {1 << len(parents)} "
+                    f"thresholds, got {len(thresh)}"
+                )
+            for p in parents:
+                if not 0 <= p < i:
+                    raise ValueError(f"node {i}: parent {p} not earlier in topo order")
+            for t in thresh:
+                if not 0 <= t <= 256:
+                    raise ValueError(f"node {i}: threshold {t} outside [0, 256]")
+        for n in self.evidence + self.queries:
+            if not 0 <= n < len(self.nodes):
+                raise ValueError(f"evidence/query node {n} out of range")
+        if not self.queries:
+            raise ValueError("SweepPlan needs at least one query node")
+
+
+def _indicator_or(indicators, selected, length):
+    """OR of the selected CPT-row indicator words, constant-folded."""
+    if not selected:
+        return None
+    if len(selected) == length:
+        return _ONES
+    acc = indicators[selected[0]]
+    for l in selected[1:]:
+        acc = acc | indicators[l]
+    return acc
+
+
+def _node_stream(base, kd1, thresh_masks, hi, shape):
+    """Bit-sliced ``byte < threshold`` borrow chain over the needed planes.
+
+    thresh_masks[k] is the packed mask of threshold bit ``k`` per position
+    (None = bit clear everywhere, ``_ONES`` = set everywhere); ``hi`` marks
+    positions whose threshold is 256 (always fires).  Planes below the lowest
+    set threshold bit cannot flip a strict less-than against a zero tail and
+    are never generated.
+    """
+    lo = 8
+    for k in range(8):
+        if thresh_masks[k] is not None:
+            lo = k
+            break
+    lt = None
+    eq = None
+    for k in range(7, lo - 1, -1):
+        r = rng.plane_word(base, kd1, k)
+        t = thresh_masks[k]
+        if t is None:
+            eq = ~r if eq is None else eq & ~r
+        elif t is _ONES:
+            c = ~r if eq is None else eq & ~r
+            lt = c if lt is None else lt | c
+            eq = r if eq is None else eq & r
+        else:
+            c = (~r & t) if eq is None else (eq & ~r & t)
+            lt = c if lt is None else lt | c
+            eq = ~(r ^ t) if eq is None else eq & ~(r ^ t)
+    if lt is None:
+        lt = jnp.zeros(shape, jnp.uint32)
+    if hi is not None:
+        lt = lt | (jnp.broadcast_to(_FULL, shape) if hi is _ONES else hi)
+    return lt
+
+
+def sweep_tile(
+    plan: SweepPlan,
+    kd0,
+    kd1,
+    ev: jnp.ndarray,
+    f0,
+    w0,
+    bf: int,
+    bw: int,
+    w_words: int,
+    n_frames: int,
+):
+    """Counts for one tile: frames ``[f0, f0+bf)`` x words ``[w0, w0+bw)``.
+
+    ev: (bf, >= n_ev) int32 evidence values for the tile's frames.
+    Returns ``(numer (bf, n_q) int32, denom (bf,) int32)`` -- popcounts of the
+    acceptance stream and of each query stream ANDed with it, over this tile's
+    words only (callers accumulate across word tiles).
+
+    The entropy counter for node ``n``, frame ``f``, word ``w`` is
+    ``n * n_frames * w_words + f * w_words + w`` -- one base counter per
+    output word, planes salted from it -- so tiles of any shape draw identical
+    bits for identical global positions.
+    """
+    fi = jax.lax.broadcasted_iota(jnp.uint32, (bf, bw), 0)
+    wi = jax.lax.broadcasted_iota(jnp.uint32, (bf, bw), 1)
+    pos = (jnp.asarray(f0, jnp.uint32) + fi) * jnp.uint32(w_words) \
+        + jnp.asarray(w0, jnp.uint32) + wi
+    streams = []
+    for n, (parents, thresh) in enumerate(plan.nodes):
+        node_off = jnp.uint32((n * n_frames * w_words) & 0xFFFFFFFF)
+        base = rng.plane_base(node_off + pos, kd0)
+        m = len(parents)
+        l = len(thresh)
+        if m == 0:
+            t = thresh[0]
+            masks = [(_ONES if (t >> k) & 1 else None) for k in range(8)]
+            hi = _ONES if t >= 256 else None
+        else:
+            # CPT-row indicator words: AND of parent literals, first parent =
+            # most significant row bit (the spec.py / Fig S8 ordering).
+            indicators = []
+            for row in range(l):
+                acc = None
+                for j, p in enumerate(parents):
+                    lit = streams[p] if (row >> (m - 1 - j)) & 1 else ~streams[p]
+                    acc = lit if acc is None else acc & lit
+                indicators.append(acc)
+            masks = [
+                _indicator_or(indicators, [r for r in range(l) if (thresh[r] >> k) & 1], l)
+                for k in range(8)
+            ]
+            hi = _indicator_or(indicators, [r for r in range(l) if thresh[r] >= 256], l)
+        streams.append(_node_stream(base, kd1, masks, hi, (bf, bw)))
+    accept = None
+    for col, e in enumerate(plan.evidence):
+        ind = streams[e] ^ jnp.where(ev[:, col : col + 1] == 1, jnp.uint32(0), _FULL)
+        accept = ind if accept is None else accept & ind
+    if accept is None:
+        accept = jnp.broadcast_to(_FULL, (bf, bw))
+    denom = jnp.sum(jax.lax.population_count(accept).astype(jnp.int32), axis=-1)
+    numer = jnp.stack(
+        [
+            jnp.sum(jax.lax.population_count(accept & streams[q]).astype(jnp.int32), axis=-1)
+            for q in plan.queries
+        ],
+        axis=-1,
+    )
+    return numer, denom

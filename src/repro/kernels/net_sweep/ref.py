@@ -1,0 +1,24 @@
+"""jnp reference for the fused whole-network sweep (the CPU production path).
+
+One call of the shared bit-sliced body over the full ``(B, W)`` array: every
+node stream is generated in-register from counter bit-planes, conditioned, and
+popcount-reduced in a single XLA fusion -- no per-node stream, no entropy
+word, and no intermediate sample ever reaches HBM.  The Pallas kernel runs the
+same body per tile, so the two are bit-identical.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.kernels.net_sweep.common import SweepPlan, sweep_tile
+
+
+def net_sweep_ref(
+    kd: jnp.ndarray, ev: jnp.ndarray, plan: SweepPlan, n_bits: int
+):
+    """kd (2,) u32 seed words, ev (B, n_ev) int32 -> (numer (B, n_q) i32, denom (B,) i32)."""
+    b = ev.shape[0]
+    w = bitops.n_words(n_bits)
+    return sweep_tile(plan, kd[0], kd[1], ev, 0, 0, b, w, w, b)

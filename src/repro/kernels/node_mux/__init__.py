@@ -1,2 +1,2 @@
 from repro.kernels.node_mux.ops import node_mux  # noqa: F401
-from repro.kernels.node_mux.ref import node_mux_ref  # noqa: F401
+from repro.kernels.node_mux.ref import node_mux_gather_ref, node_mux_ref  # noqa: F401

@@ -1,11 +1,17 @@
-"""Pallas TPU kernel: fused CPT encode + parent-select MUX tree for one node.
+"""Pallas TPU kernels: one Bayesian-network node from pre-drawn entropy.
 
-For a block of rows the kernel compares pre-drawn random bytes against the
-8-bit CPT thresholds (the SNE comparator, one per CPT row), packs 32 stream
-bits per uint32 lane word, and collapses the ``2**m`` leaf streams through the
-value-select MUX tree keyed by the parents' packed bits -- all in VMEM, nothing
-per-leaf ever reaching HBM.  This is the compiler's inner sweep: one launch per
-network node per batch block.
+Two formulations (same conditional distribution, different entropy budgets):
+
+* ``node_mux_pallas`` (row-encode): compare pre-drawn random bytes against the
+  8-bit CPT thresholds (the SNE comparator, one per CPT row), pack 32 stream
+  bits per uint32 lane word, and collapse the ``2**m`` leaf streams through
+  the value-select MUX tree keyed by the parents' packed bits.
+* ``node_mux_gather_pallas`` (threshold-gather): gather the 8-bit threshold by
+  the parents' bits first, then compare one entropy byte -- ``2**m`` times
+  less entropy, no stream-wide MUX tree.
+
+Everything stays in VMEM; nothing per-leaf ever reaches HBM.  This is the
+compiler's unfused inner sweep: one launch per network node per batch block.
 
 Tiling: grid over rows (evidence frames / broadcast rows).  The working set is
 ``block_r * L * (n_rand + W)`` words plus the ``m * block_r * W`` parent words,
@@ -46,6 +52,64 @@ def _node_mux_kernel(cpt_ref, rand_ref, par_ref, out_ref):
         s = parents[j][:, None, :]         # (bR, 1, W)
         level = (s & level[:, 1::2, :]) | (~s & level[:, 0::2, :])
     out_ref[...] = level[:, 0, :]
+
+
+def _node_mux_gather_kernel(cpt_ref, rand_ref, par_ref, out_ref):
+    cpt = cpt_ref[...]                    # (bR, L) f32
+    rand = rand_ref[...]                  # (bR, n_rand) u32
+    parents = par_ref[...]                # (m, bR, W) u32
+    thresh = jnp.clip(jnp.round(cpt * 256.0), 0.0, 256.0).astype(jnp.uint32)
+    br, n_rand = rand.shape
+    w = n_rand // 8
+    m = parents.shape[0]
+    # Threshold-gather: the MUX tree runs over the 8-bit thresholds, not over
+    # packed streams -- one entropy byte per stream bit regardless of fan-in.
+    acc = jnp.zeros((br, w), jnp.uint32)
+    for byte in range(4):
+        lane = ((rand >> jnp.uint32(8 * byte)) & jnp.uint32(0xFF)).reshape(br, w, 8)
+        shifts = (jnp.arange(8, dtype=jnp.uint32) * 4 + byte).astype(jnp.uint32)
+        level = jnp.broadcast_to(thresh[:, None, None, :], (br, 1, 1, thresh.shape[-1]))
+        for j in range(m - 1, -1, -1):
+            pbit = (parents[j][..., None] >> shifts) & jnp.uint32(1)
+            level = jnp.where(pbit[..., None] == 1, level[..., 1::2], level[..., 0::2])
+        bits = (lane < level[..., 0]).astype(jnp.uint32)
+        acc = acc | jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def node_mux_gather_pallas(
+    cpt: jnp.ndarray,
+    rand_words: jnp.ndarray,
+    parents: jnp.ndarray,
+    *,
+    block_r: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """cpt (R, L) f32, rand_words (R, n_rand) u32, parents (m, R, W) u32
+    -> (R, W) u32 packed node streams (threshold-gather formulation)."""
+    r, n_rand = rand_words.shape
+    l = cpt.shape[-1]
+    m = parents.shape[0]
+    assert l == 1 << m, (l, m)
+    assert n_rand % 8 == 0
+    w = n_rand // 8
+    assert parents.shape == (m, r, w), (parents.shape, (m, r, w))
+    block_r = min(block_r, r)
+    assert r % block_r == 0, f"rows {r} not divisible by block {block_r}"
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _node_mux_gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, n_rand), lambda i: (i, 0)),
+            pl.BlockSpec((m, block_r, w), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, w), jnp.uint32),
+        interpret=interpret,
+    )(cpt, rand_words, parents)
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))

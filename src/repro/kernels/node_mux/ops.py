@@ -1,9 +1,17 @@
 """jit'd public wrapper for the node-MUX sweep (the bayesnet compiler's inner op).
 
-``node_mux`` turns one Bayesian-network node into its packed stochastic stream:
-encode the ``2**m`` CPT rows with fresh counter-based entropy, then select per
-bit position through the parents' packed streams (the n-ary Fig S8 MUX tree).
-Dispatch follows the other four kernel ops: Pallas kernel where it compiles,
+``node_mux`` turns one Bayesian-network node into its packed stochastic stream.
+Two modes, identical in distribution:
+
+* ``mode='gather'`` (default, production): gather the node's 8-bit DAC
+  threshold by the parents' packed bits, then compare one entropy byte per
+  stream bit -- ``2**m`` times less entropy than row-encode and no stream-wide
+  MUX tree (the select collapses to a threshold gather).
+* ``mode='rows'`` (the original formulation, kept as the statistical
+  verification baseline): encode all ``2**m`` CPT rows with fresh entropy and
+  MUX-select by the parents' packed streams (the n-ary Fig S8 tree).
+
+Dispatch follows the other kernel ops: Pallas kernel where it compiles,
 bit-exact jnp reference as the CPU production fallback.
 """
 
@@ -16,17 +24,18 @@ import jax.numpy as jnp
 
 from repro.core import rng
 from repro.kernels import backend
-from repro.kernels.node_mux.kernel import node_mux_pallas
-from repro.kernels.node_mux.ref import node_mux_ref
+from repro.kernels.node_mux.kernel import node_mux_gather_pallas, node_mux_pallas
+from repro.kernels.node_mux.ref import node_mux_gather_ref, node_mux_ref
 
 
-@functools.partial(jax.jit, static_argnames=("n_bits", "use_kernel", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_bits", "mode", "use_kernel", "interpret"))
 def node_mux(
     key: jax.Array,
     cpt: jnp.ndarray,
     parents: jnp.ndarray,
     n_bits: int = 128,
     *,
+    mode: str = "gather",
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -35,12 +44,19 @@ def node_mux(
     cpt:     (..., L) CPT rows P(node=1 | parent assignment), L = 2**m, row
              index with the FIRST parent as the most significant bit.
     parents: (m, ..., n_words) packed parent streams (leading dims match cpt).
-    Returns (..., n_words) uint32.  n_bits must be a multiple of 32.  Each CPT
-    row draws independent counter-based entropy from ``key`` (one SNE per row),
-    so the node's bits are conditionally independent given the parents' bits --
-    the exact joint-sampling semantics of the network.
+    Returns (..., n_words) uint32.  n_bits must be a multiple of 32.
+
+    ``mode='gather'`` draws ONE counter-entropy byte per stream bit and
+    compares it against the parent-gathered threshold; ``mode='rows'`` draws
+    fresh entropy per CPT row (one SNE per row) and MUX-selects.  Conditional
+    on the parents' bits the output bit is Bernoulli(cpt[row]) either way and
+    positions stay conditionally independent, so the two modes sample the
+    same joint -- asserted statistically in tests.  The two modes consume
+    differently-shaped entropy, so their streams are not bit-identical.
     """
     assert n_bits % 32 == 0, "kernel path consumes whole uint32 entropy words"
+    if mode not in ("gather", "rows"):
+        raise ValueError(f"unknown node_mux mode {mode!r}")
     interpret = backend.resolve_interpret(interpret)
     use_kernel = backend.resolve_use_kernel(use_kernel, interpret)
     cpt = jnp.asarray(cpt, jnp.float32)
@@ -53,10 +69,19 @@ def node_mux(
     flat_cpt = cpt.reshape(-1, l)
     flat_par = parents.reshape(m, -1, w)
     rows = flat_cpt.shape[0]
-    rand = rng.counter_hash_words(key, (rows, l), n_bits // 4)
-    if use_kernel:
-        block = backend.pick_block(rows, 256)
-        out = node_mux_pallas(flat_cpt, rand, flat_par, block_r=block, interpret=interpret)
+    block = backend.pick_block(rows, 256)
+    if mode == "gather":
+        rand = rng.counter_hash_words(key, (rows,), n_bits // 4)
+        if use_kernel:
+            out = node_mux_gather_pallas(
+                flat_cpt, rand, flat_par, block_r=block, interpret=interpret
+            )
+        else:
+            out = node_mux_gather_ref(flat_cpt, rand, flat_par)
     else:
-        out = node_mux_ref(flat_cpt, rand, flat_par)
+        rand = rng.counter_hash_words(key, (rows, l), n_bits // 4)
+        if use_kernel:
+            out = node_mux_pallas(flat_cpt, rand, flat_par, block_r=block, interpret=interpret)
+        else:
+            out = node_mux_ref(flat_cpt, rand, flat_par)
     return out.reshape(lead + (w,))

@@ -1,11 +1,21 @@
-"""jnp reference for the node-MUX sweep (the CPU production fallback).
+"""jnp references for the node-MUX sweep (the CPU production fallback).
 
-A Bayesian-network node's packed stream is: encode the ``2**m`` CPT rows as
-independent packed streams (byte-threshold comparators, same scheme as
-``sne_encode``), then route each bit position through the value-select MUX tree
-keyed by the parents' bits at that position.  This reference composes the core
-packed primitives; XLA fuses it well on CPU, and the Pallas kernel reproduces
-it bit-exactly from the same entropy words.
+Two formulations of the same conditional Bernoulli:
+
+* ``node_mux_ref`` (row-encode): encode the ``2**m`` CPT rows as independent
+  packed streams (byte-threshold comparators, same scheme as ``sne_encode``),
+  then route each bit position through the value-select MUX tree keyed by the
+  parents' bits at that position.  ``2**m`` entropy draws per stream bit.
+* ``node_mux_gather_ref`` (threshold-gather): select the node's 8-bit DAC
+  threshold *by the parents' bits first*, then compare a single entropy byte
+  against it.  Conditional on the parents' bits at a position, the output bit
+  is Bernoulli(cpt[row]) either way, and disjoint entropy per position keeps
+  bits conditionally independent -- distributionally identical to row-encode
+  with ``2**m`` times less entropy and no stream-wide MUX tree at all (the
+  select collapses to an 8-bit threshold gather).
+
+Both compose core packed primitives; XLA fuses them well on CPU, and the
+Pallas kernels reproduce each bit-exactly from the same entropy words.
 """
 
 from __future__ import annotations
@@ -26,3 +36,47 @@ def node_mux_ref(
     """
     leaves = rng.packed_from_bytes(rand, rng.threshold_from_p(cpt))  # (R, L, W)
     return logic.mux_select(parents, leaves)
+
+
+def gather_thresholds(
+    thresh: jnp.ndarray, parents: jnp.ndarray, byte: int
+) -> jnp.ndarray:
+    """Per-position threshold gather: thresh (R, L) u32, parents (m, R, W) u32
+    -> (R, W, 8) u32, the selected threshold at every stream position whose
+    packed-bit index is ``4 e + byte`` (entropy word ``e`` of its output word).
+
+    The gather is a value-select tree over the *thresholds* (8-bit scalars)
+    instead of over full packed streams -- the stream-wide MUX tree of the
+    row-encode formulation collapses to this.  Pairing convention matches
+    ``logic.mux_select``: first parent = most significant row-index bit.
+    """
+    m = parents.shape[0]
+    shifts = (jnp.arange(8, dtype=jnp.uint32) * 4 + byte).astype(jnp.uint32)
+    level = jnp.asarray(thresh, jnp.uint32)[:, None, None, :]      # (R, 1, 1, L)
+    for j in range(m - 1, -1, -1):
+        pbit = (parents[j][..., None] >> shifts) & jnp.uint32(1)   # (R, W, 8)
+        level = jnp.where(pbit[..., None] == 1, level[..., 1::2], level[..., 0::2])
+    return level[..., 0]
+
+
+def node_mux_gather_ref(
+    cpt: jnp.ndarray, rand: jnp.ndarray, parents: jnp.ndarray
+) -> jnp.ndarray:
+    """cpt (R, L) f32, rand (R, n_rand) u32, parents (m, R, W) u32 -> (R, W).
+
+    Threshold-gather formulation: one entropy byte per stream bit regardless
+    of fan-in.  Bit layout matches ``rng.packed_from_bytes`` (stream bit
+    ``4 r + b`` from byte ``b`` of entropy word ``r`` lands in output word
+    ``r // 8`` at bit ``4 (r % 8) + b``).
+    """
+    thresh = rng.threshold_from_p(cpt)                              # (R, L)
+    r, n_rand = rand.shape
+    w = n_rand // 8
+    acc = jnp.zeros((r, w), jnp.uint32)
+    for byte in range(4):
+        lane = ((rand >> jnp.uint32(8 * byte)) & jnp.uint32(0xFF)).reshape(r, w, 8)
+        th = gather_thresholds(thresh, parents, byte)               # (R, W, 8)
+        bits = (lane < th).astype(jnp.uint32)
+        shifts = (jnp.arange(8, dtype=jnp.uint32) * 4 + byte).astype(jnp.uint32)
+        acc = acc | jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+    return acc

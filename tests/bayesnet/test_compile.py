@@ -108,15 +108,19 @@ def test_randomized_dags_match_enumeration_oracle(seed):
 
 
 def test_estimators_and_entropy_modes_consistent():
-    """fill vs ratio on the same compiled program differ only by stream noise."""
+    """fill vs ratio on the same compiled program differ only by stream noise.
+
+    Pins ``share_entropy=True`` so both estimators condition the *same*
+    unfused streams (the production default now lowers ratio to the fused
+    sweep, whose entropy is drawn differently)."""
     spec = _random_dag(7)
     frames = jnp.zeros((4, len(spec.evidence)), jnp.int32)
-    a, acc_a = compile_network(spec, n_bits=N_BITS, estimator="ratio").run(
-        jax.random.PRNGKey(0), frames
-    )
-    b, acc_b = compile_network(spec, n_bits=N_BITS, estimator="fill").run(
-        jax.random.PRNGKey(0), frames
-    )
+    a, acc_a = compile_network(
+        spec, n_bits=N_BITS, share_entropy=True, estimator="ratio"
+    ).run(jax.random.PRNGKey(0), frames)
+    b, acc_b = compile_network(
+        spec, n_bits=N_BITS, share_entropy=True, estimator="fill"
+    ).run(jax.random.PRNGKey(0), frames)
     # same entropy, same acceptance stream -> identical counts; estimates close
     np.testing.assert_array_equal(np.asarray(acc_a), np.asarray(acc_b))
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.05)

@@ -1,0 +1,224 @@
+"""Threshold-gather + fused net_sweep correctness.
+
+The equivalence chain: gather-mode node_mux matches row-encode node_mux on
+parent-conditional bit means; both kernels match their jnp refs bit-exactly;
+the fused whole-network sweep matches its jnp ref bit-exactly, the unfused
+compiled program statistically, and the enumeration oracle within 3 sigma on
+randomized DAGs and on every scenario network.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+
+from repro.bayesnet import (
+    SCENARIOS,
+    by_name,
+    compile_network,
+    make_posterior_fn,
+    sample_evidence,
+    sweep_plan,
+)
+from repro.bayesnet.spec import NetworkSpec, Node
+from repro.core import bitops, rng
+from repro.kernels.net_sweep import net_sweep
+from repro.kernels.node_mux import node_mux
+
+N_BITS = 1 << 14
+
+
+# --- threshold-gather node_mux vs the row-encode baseline --------------------------
+
+def _conditional_means(out, parents, n_bits):
+    """Mean of the output bit per parent assignment (first parent = MSB)."""
+    m = parents.shape[0]
+    pb = np.stack([np.asarray(bitops.unpack_bits(parents[j], n_bits))[0] for j in range(m)])
+    ob = np.asarray(bitops.unpack_bits(out, n_bits))[0]
+    idx = np.zeros(n_bits, np.int64)
+    for j in range(m):
+        idx = (idx << 1) | pb[j]
+    means, counts = [], []
+    for row in range(1 << m):
+        sel = idx == row
+        means.append(ob[sel].mean())
+        counts.append(sel.sum())
+    return np.asarray(means), np.asarray(counts)
+
+
+@pytest.mark.parametrize("mode", ["gather", "rows"])
+def test_node_mux_modes_parent_conditional_bit_means(mode):
+    """Both formulations sample Bernoulli(cpt[row]) conditional on the parents:
+    the gather mode is distributionally identical to row-encode, with 2^m x
+    less entropy."""
+    m = 2
+    cpt = jnp.array([[0.08, 0.35, 0.72, 0.94]])
+    parents = rng.fair_bits(jax.random.PRNGKey(2), (m, 1), N_BITS)
+    out = node_mux(jax.random.PRNGKey(3), cpt, parents, N_BITS, mode=mode, use_kernel=False)
+    means, counts = _conditional_means(out, parents, N_BITS)
+    want = np.asarray(cpt[0])
+    sigma = np.sqrt(want * (1 - want) / counts)
+    assert np.all(np.abs(means - want) < 4 * sigma + 2 / 256), (mode, means, want)
+
+
+def test_gather_and_rows_agree_on_marginal():
+    """Same key, same parents: the two modes' marginals differ only by noise."""
+    cpt = jnp.broadcast_to(jnp.array([0.15, 0.55, 0.65, 0.85]), (8, 4))
+    parents = rng.fair_bits(jax.random.PRNGKey(9), (2, 8), N_BITS)
+    pg = bitops.decode(node_mux(jax.random.PRNGKey(4), cpt, parents, N_BITS,
+                                mode="gather", use_kernel=False), N_BITS)
+    pr = bitops.decode(node_mux(jax.random.PRNGKey(4), cpt, parents, N_BITS,
+                                mode="rows", use_kernel=False), N_BITS)
+    tol = 8 * np.sqrt(0.25 / N_BITS)
+    np.testing.assert_allclose(np.asarray(pg), np.asarray(pr), atol=2 * tol)
+
+
+@pytest.mark.parametrize("mode", ["gather", "rows"])
+def test_node_mux_kernel_bitexact_both_modes(mode):
+    r, m, n_bits = 32, 3, 1024
+    cpt = jax.random.uniform(jax.random.PRNGKey(1), (r, 1 << m))
+    parents = rng.fair_bits(jax.random.PRNGKey(2), (m, r), n_bits)
+    ref = node_mux(jax.random.PRNGKey(3), cpt, parents, n_bits, mode=mode, use_kernel=False)
+    ker = node_mux(jax.random.PRNGKey(3), cpt, parents, n_bits, mode=mode,
+                   use_kernel=True, interpret=True)
+    assert bool(jnp.all(ref == ker))
+
+
+# --- fused net_sweep ----------------------------------------------------------------
+
+def test_net_sweep_kernel_bitexact_vs_ref():
+    """Tiled Pallas accumulation == single-tile jnp ref, counts and all."""
+    spec = by_name("pedestrian-night")
+    plan = sweep_plan(spec, spec.queries, spec.evidence)
+    ev = sample_evidence(spec, jax.random.PRNGKey(1), 64)
+    nk, dk = net_sweep(jax.random.PRNGKey(0), ev, plan=plan, n_bits=2048,
+                       use_kernel=True, interpret=True)
+    nr, dr = net_sweep(jax.random.PRNGKey(0), ev, plan=plan, n_bits=2048,
+                       use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+
+def test_net_sweep_kernel_bitexact_fan_in_three():
+    spec = by_name("intersection")
+    plan = sweep_plan(spec, spec.queries, spec.evidence)
+    ev = sample_evidence(spec, jax.random.PRNGKey(5), 16)
+    nk, dk = net_sweep(jax.random.PRNGKey(3), ev, plan=plan, n_bits=1024,
+                       use_kernel=True, interpret=True)
+    nr, dr = net_sweep(jax.random.PRNGKey(3), ev, plan=plan, n_bits=1024,
+                       use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+
+def _zmax(post, exact, accepted, floor=1e-3):
+    post, exact = np.asarray(post), np.asarray(exact)
+    acc = np.asarray(accepted)[:, None]
+    sig = np.sqrt(np.clip(exact * (1 - exact), floor, None) / np.maximum(acc, 1))
+    keep = np.broadcast_to(acc > 50, post.shape)
+    return float(np.max(np.abs(post - exact)[keep] / sig[keep]))
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_fused_matches_unfused_every_scenario(name):
+    """The fused sweep and the per-node program are two samplers of the same
+    quantised network: both must sit within stochastic noise of the oracle,
+    frame by frame."""
+    spec = by_name(name)
+    ev = sample_evidence(spec, jax.random.PRNGKey(11), 64)
+    exact, _ = make_posterior_fn(spec, dac_quantize=True)(ev)
+    fused = compile_network(spec, n_bits=N_BITS, share_entropy=False, fused=True)
+    unfused = compile_network(spec, n_bits=N_BITS, share_entropy=False, fused=False)
+    assert fused.fused and not unfused.fused
+    pf, af = fused.run(jax.random.PRNGKey(0), ev)
+    pu, au = unfused.run(jax.random.PRNGKey(0), ev)
+    assert _zmax(pf, exact, af) < 5.0, name
+    assert _zmax(pu, exact, au) < 5.0, name
+    # the two estimates differ only by their independent stochastic noise
+    sig = np.sqrt(
+        np.clip(np.asarray(exact) * (1 - np.asarray(exact)), 1e-3, None)
+        * (1 / np.maximum(np.asarray(af), 1)[:, None] + 1 / np.maximum(np.asarray(au), 1)[:, None])
+    )
+    keep = np.broadcast_to(
+        (np.asarray(af) > 50)[:, None] & (np.asarray(au) > 50)[:, None],
+        sig.shape,
+    )
+    z = np.abs(np.asarray(pf) - np.asarray(pu)) / sig
+    assert float(np.max(z[keep])) < 5.0, name
+
+
+def _random_dag(seed: int) -> NetworkSpec:
+    """Random 4-7 node DAG with <=3 parents; CPTs on the 8-bit DAC grid so the
+    float oracle and the quantised stochastic path sample identical networks."""
+    rs = np.random.RandomState(seed)
+    n = int(rs.randint(4, 8))
+    nodes = []
+    for i in range(n):
+        k = int(min(i, rs.randint(0, 4)))
+        parents = tuple(f"n{j}" for j in sorted(rs.choice(i, size=k, replace=False))) if k else ()
+        cpt = tuple(rs.randint(26, 231, size=1 << len(parents)) / 256.0)
+        nodes.append(Node(f"n{i}", parents, cpt))
+    names = [nd.name for nd in nodes]
+    n_ev = int(rs.randint(1, 3))
+    ev = tuple(str(e) for e in rs.choice(names[1:], size=min(n_ev, n - 1), replace=False))
+    queries = tuple(nm for nm in names if nm not in ev)[:2]
+    return NetworkSpec(name=f"rand{seed}", nodes=tuple(nodes),
+                       evidence=ev, queries=queries)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_fused_randomized_dags_match_enumeration_oracle(seed):
+    """Fused posteriors agree with exact enumeration on random DAGs."""
+    spec = _random_dag(seed)
+    oracle = make_posterior_fn(spec)      # CPTs already on the DAC grid
+    frames = jnp.stack([
+        jnp.zeros((len(spec.evidence),), jnp.int32),
+        jnp.ones((len(spec.evidence),), jnp.int32),
+    ])
+    exact, _ = oracle(frames)
+    net = compile_network(spec, n_bits=N_BITS, share_entropy=False, fused=True)
+    post, acc = net.run(jax.random.PRNGKey(seed), frames)
+    if not bool(np.any(np.asarray(acc) > 50)):
+        return                            # evidence too unlikely at this n_bits
+    assert _zmax(post, exact, acc) < 4.0, spec.name
+
+
+def test_deterministic_nodes_and_extreme_thresholds():
+    """p=0 and p=1 nodes short-circuit (no planes) and stay exact."""
+    spec = NetworkSpec(
+        name="extremes",
+        nodes=(
+            Node("a", (), (1.0,)),
+            Node("b", (), (0.0,)),
+            Node("c", ("a", "b"), (0.3, 1.0, 0.25, 0.0)),
+        ),
+        evidence=(),
+        queries=("a", "b", "c"),
+    )
+    net = compile_network(spec, n_bits=4096, evidence=())
+    post, acc = net.run(jax.random.PRNGKey(0), jnp.zeros((2, 0), jnp.int32))
+    post = np.asarray(post)
+    assert np.all(np.asarray(acc) == 4096)
+    np.testing.assert_allclose(post[:, 0], 1.0)           # a always fires
+    np.testing.assert_allclose(post[:, 1], 0.0)           # b never fires
+    # c: parents fixed at (a=1, b=0) -> row 10 -> P(c) = 0.25
+    sigma = np.sqrt(0.25 * 0.75 / 4096)
+    assert np.all(np.abs(post[:, 2] - 0.25) < 4 * sigma + 2 / 256)
+
+
+def test_fused_requires_ratio_and_independent_entropy():
+    spec = by_name("sensor-degradation")
+    with pytest.raises(ValueError):
+        compile_network(spec, n_bits=1024, share_entropy=True, fused=True)
+    with pytest.raises(ValueError):
+        compile_network(spec, n_bits=1024, estimator="fill", fused=True)
+    with pytest.raises(ValueError):
+        compile_network(spec, n_bits=1024, mux_mode="rows", fused=True)
+    # auto-resolution picks the only valid lowering in each case
+    assert compile_network(spec, n_bits=1024, share_entropy=True).fused is False
+    assert compile_network(spec, n_bits=1024, estimator="fill").fused is False
+    # an explicit row-encode request means the unfused per-node lowering
+    assert compile_network(spec, n_bits=1024, mux_mode="rows").fused is False
+    assert compile_network(spec, n_bits=1024).fused is True

@@ -156,6 +156,66 @@ def test_threefry_impl_available():
     assert w.shape == (2, 32) and w.dtype == jnp.uint32
 
 
+def test_counter_iota_matches_flat_arange():
+    """Broadcasted-iota counters equal the flat row-major arange, with offset."""
+    got = np.asarray(rng.counter_iota((3, 5, 4)))
+    np.testing.assert_array_equal(got, np.arange(60, dtype=np.uint32).reshape(3, 5, 4))
+    shifted = np.asarray(rng.counter_iota((2, 4), offset=100))
+    np.testing.assert_array_equal(shifted, 100 + np.arange(8, dtype=np.uint32).reshape(2, 4))
+    # counter_hash_words with offset draws a contiguous slice of the same space
+    k = jax.random.PRNGKey(7)
+    whole = np.asarray(rng.counter_hash_words(k, (4,), 8)).reshape(-1)
+    part = np.asarray(rng.counter_hash_words(k, (2,), 4, offset=8)).reshape(-1)
+    np.testing.assert_array_equal(part, whole[8:16])
+
+
+def test_fair_bits_threefry_end_to_end():
+    """fair_bits(impl='threefry') draws exactly jax.random.bits words, so the
+    threefry mode is reproducible against other JAX code (it used to fall
+    through to the counter-hash generator silently)."""
+    k = jax.random.PRNGKey(11)
+    got = rng.fair_bits(k, (3,), 128, impl="threefry")
+    want = jax.random.bits(k, (3, 4), jnp.uint32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    fast = rng.fair_bits(k, (3,), 128)
+    assert not np.array_equal(np.asarray(got), np.asarray(fast))
+    # pad bits stay zero through the threefry path too
+    s100 = rng.fair_bits(jax.random.PRNGKey(5), (), 100, impl="threefry")
+    assert int(bitops.popcount(s100 & ~bitops.pad_mask(100))) == 0
+
+
+def test_plane_entropy_statistics():
+    """The fused sweep's bit-plane generator (shared first round + salted
+    second round) yields clean comparator bytes: per-threshold hit rates,
+    cross-plane correlation, and adjacent-word correlation all within
+    binomial noise."""
+    n_words = 1 << 12
+    kd = rng.seed_words(jax.random.PRNGKey(21))
+    base = rng.plane_base(rng.counter_iota((n_words,)), kd[0])
+    planes = np.stack(
+        [np.asarray(rng.plane_word(base, kd[1], k)) for k in range(8)]
+    )                                                     # (8, n_words) u32
+    bits = ((planes[:, :, None] >> np.arange(32)) & 1).reshape(8, -1)
+    n = bits.shape[1]
+    sig = 0.5 / np.sqrt(n)
+    # each plane is a fair coin
+    assert np.abs(bits.mean(axis=1) - 0.5).max() < 6 * sig
+    # planes are pairwise uncorrelated (byte bits must be jointly uniform)
+    c = np.corrcoef(bits)
+    np.fill_diagonal(c, 0)
+    assert np.abs(c).max() < 6 / np.sqrt(n)
+    # reconstructed bytes hit Bernoulli(t / 256) across the threshold range
+    byte = np.zeros(n, np.uint32)
+    for k in range(8):
+        byte |= bits[k].astype(np.uint32) << k
+    for t in (1, 37, 128, 200, 255):
+        p = byte < t
+        assert abs(p.mean() - t / 256) < 6 * np.sqrt(t / 256 * (1 - t / 256) / n)
+    # lag-1 autocorrelation along the stream
+    flat = (byte < 128).astype(np.float64)
+    assert abs(np.corrcoef(flat[:-1], flat[1:])[0, 1]) < 6 / np.sqrt(n)
+
+
 def test_fair_bits_is_half():
     s = rng.fair_bits(jax.random.PRNGKey(4), (), N)
     assert abs(float(bitops.decode(s, N)) - 0.5) < 6 * SIGMA
