@@ -1,30 +1,77 @@
 """Bench-smoke regression gates over a freshly written ``BENCH_*.json``.
 
-The first gate pins the independent-entropy cliff: per-frame joint samples
-(the production mode, what the physical memristor array provides for free)
-must stay within ``MAX_INDEP_RATIO`` of the shared-entropy launch for the
-8-node pedestrian-night network.  The committed trajectory once showed ~70x
-here; the fused ``net_sweep`` lowering holds it to low single digits, and this
-gate keeps the cliff from silently regressing.
+Two gates:
 
-Usage: ``python benchmarks/check_bench.py BENCH_<ts>.json`` (CI runs it right
-after the bench-smoke step writes the snapshot), or call :func:`check` with
-the path from the same process.
+* **Independent-entropy cliff**: per-frame joint samples (the production
+  mode, what the physical memristor array provides for free) must stay within
+  ``MAX_INDEP_RATIO`` of the shared-entropy launch for the 8-node
+  pedestrian-night network.  The committed trajectory once showed ~70x here;
+  the fused ``net_sweep`` lowering holds it to low single digits, and this
+  gate keeps the cliff from silently regressing.
+* **Trajectory regression**: every ``bayesnet_*`` scenario row present in
+  both the fresh snapshot and the newest *committed* ``BENCH_*.json`` must
+  stay within ``MAX_FPS_REGRESSION`` (30% frames/s) of the committed number.
+  The baseline is auto-discovered next to the fresh snapshot (the snapshot
+  itself is excluded), so CI compares each run against the repo's own perf
+  history; rows that exist only on one side (new scenarios, retired ones) are
+  skipped.
+
+Usage: ``python benchmarks/check_bench.py BENCH_<ts>.json [baseline.json]``
+(CI runs it right after the bench-smoke step writes the snapshot), or call
+:func:`check` with the path from the same process.
 """
 
 from __future__ import annotations
 
+import glob
 import json
+import os
+import subprocess
 import sys
 
 MAX_INDEP_RATIO = 8.0
+# Fail when a scenario's frames/s drops more than 30% vs the committed
+# snapshot: new_us > old_us / 0.7.
+MAX_FPS_REGRESSION = 0.30
 _SHARED = "bayesnet_pedestrian-night_batch1024"
 _INDEP = "bayesnet_pedestrian-night_indep_batch1024"
 
 
-def check(path: str) -> None:
+def _load(path: str) -> dict:
     with open(path) as f:
-        data = json.load(f)
+        return json.load(f)
+
+
+def newest_committed(path: str) -> str | None:
+    """Newest *git-tracked* ``BENCH_*.json`` beside ``path`` (never ``path``).
+
+    Only committed snapshots count as the perf-history baseline: a local
+    bench run drops its (untracked) snapshot into the same directory, and
+    comparing against that would let one stray local run ratchet or mask the
+    gate.  Outside a git checkout every snapshot on disk is considered.
+    Snapshot names embed a sortable timestamp, so lexicographic order is
+    chronological order.
+    """
+    root = os.path.dirname(os.path.abspath(path)) or "."
+    cands = [
+        c for c in glob.glob(os.path.join(root, "BENCH_*.json"))
+        if os.path.abspath(c) != os.path.abspath(path)
+    ]
+    try:
+        tracked = set(
+            subprocess.run(
+                ["git", "-C", root, "ls-files", "--", "BENCH_*.json"],
+                capture_output=True, text=True, check=True,
+            ).stdout.split()
+        )
+        cands = [c for c in cands if os.path.basename(c) in tracked]
+    except (OSError, subprocess.CalledProcessError):
+        pass  # not a git checkout: fall back to everything on disk
+    cands.sort()
+    return cands[-1] if cands else None
+
+
+def check_indep_ratio(data: dict, path: str) -> None:
     missing = [k for k in (_SHARED, _INDEP) if k not in data]
     if missing:
         raise SystemExit(f"{path}: missing bench rows {missing}")
@@ -43,7 +90,46 @@ def check(path: str) -> None:
         )
 
 
+def check_regression(data: dict, path: str, baseline: str | None) -> None:
+    if baseline is None:
+        baseline = newest_committed(path)
+    if baseline is None:
+        print("trajectory gate: no committed BENCH_*.json baseline, skipping")
+        return
+    base = _load(baseline)
+    rows = sorted(
+        k for k in data
+        if k.startswith("bayesnet_") and k in base and not k.startswith("_")
+    )
+    if not rows:
+        print(f"trajectory gate: no shared bayesnet rows vs {baseline}, skipping")
+        return
+    failed = []
+    for k in rows:
+        old_us = float(base[k]["us_per_call"])
+        new_us = float(data[k]["us_per_call"])
+        drop = 1.0 - old_us / new_us          # frames/s regression fraction
+        status = "FAIL" if drop > MAX_FPS_REGRESSION else "ok"
+        print(
+            f"trajectory gate [{status}]: {k}: {new_us:,.0f} us vs committed "
+            f"{old_us:,.0f} us ({'-' if drop > 0 else '+'}{abs(drop):.0%} frames/s)"
+        )
+        if drop > MAX_FPS_REGRESSION:
+            failed.append(k)
+    if failed:
+        raise SystemExit(
+            f"frames/s regressed >{MAX_FPS_REGRESSION:.0%} vs {baseline} "
+            f"for {failed}"
+        )
+
+
+def check(path: str, baseline: str | None = None) -> None:
+    data = _load(path)
+    check_indep_ratio(data, path)
+    check_regression(data, path, baseline)
+
+
 if __name__ == "__main__":
-    if len(sys.argv) != 2:
-        raise SystemExit("usage: check_bench.py BENCH_<timestamp>.json")
-    check(sys.argv[1])
+    if len(sys.argv) not in (2, 3):
+        raise SystemExit("usage: check_bench.py BENCH_<timestamp>.json [baseline.json]")
+    check(sys.argv[1], sys.argv[2] if len(sys.argv) == 3 else None)

@@ -14,8 +14,18 @@ import jax
 ROWS = []
 
 
-def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall-time per call in microseconds (jax arrays blocked)."""
+def timeit(
+    fn: Callable, *args, warmup: int = 1, iters: int = 5, stat: str = "median"
+) -> float:
+    """Wall-time per call in microseconds (jax arrays blocked).
+
+    ``stat='median'`` is the default; ``stat='min'`` reports the fastest
+    observed call -- the standard noise-robust estimator when the benchmark
+    shares its cores with other tenants (an interfered call can run 10-20x
+    slow, which poisons a small-sample median but never the min).  The
+    regression-gated bayesnet rows use it so CI compares machine capability,
+    not scheduler luck.
+    """
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -26,7 +36,7 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    return (times[0] if stat == "min" else times[len(times) // 2]) * 1e6
 
 
 def emit(name: str, us_per_call: float, derived: str):

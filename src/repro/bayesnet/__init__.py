@@ -1,11 +1,14 @@
 """Bayesian-network compiler: declarative DAG specs lowered to the packed
-stochastic domain (DESIGN.md SS8).
+stochastic domain (DESIGN.md SS8-SS10).
 
-    spec.py       NetworkSpec / Node -- the source language
+    spec.py       NetworkSpec / Node -- the source language; nodes carry a
+                  cardinality k (binary = the k=2 special case)
     compile.py    lowering: fused net_sweep (production) or per-node
-                  rng/node_mux/cordiv packed programs (verification baseline)
-    analytic.py   exact enumeration oracle + ancestral evidence sampling
+                  rng/node_mux/cordiv packed programs (verification baseline);
+                  k-ary nodes ride value bit-planes + 8-bit DAC CDFs
+    analytic.py   exact mixed-radix enumeration oracle + ancestral sampling
     scenarios.py  5-12 node driving networks over data/detection statistics
+                  (binary quartet + categorical trio)
     driver.py     serve-style continuous batching of evidence frames
 """
 

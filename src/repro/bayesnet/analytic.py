@@ -1,58 +1,86 @@
 """Exact enumeration oracle for :class:`~repro.bayesnet.spec.NetworkSpec`.
 
-Full-joint enumeration over the ``2**N`` binary assignments, vectorised: the
-assignment grid, the per-node CPT gathers and the evidence-consistency masks
-are all plain array ops, so one jit launch evaluates *batches* of evidence
-frames against the whole joint at once.  For the 5-12 node scenario networks
-this is exact, fast, and serves as the correctness bound for the stochastic
-backend (compiled posteriors must match within O(1/sqrt(n_accepted))).
+Full-joint enumeration over the ``prod(k_i)`` mixed-radix assignments,
+vectorised: the assignment grid, the per-node CPT gathers and the
+evidence-consistency masks are all plain array ops, so one jit launch
+evaluates *batches* of evidence frames against the whole joint at once.  For
+the scenario networks this is exact, fast, and serves as the correctness
+bound for the stochastic backend (compiled posteriors must match within
+O(1/sqrt(n_accepted))).
 
-``dac_quantize=True`` rounds every CPT entry to the 8-bit programming DAC grid
-(k/256) before enumerating -- the exact distribution the packed-stochastic
-lowering samples from -- so oracle-vs-stochastic comparisons isolate the
-stochastic noise from the (documented, bounded) quantisation bias.
+``dac_quantize=True`` snaps every CPT row to the distribution the 8-bit DAC
+CDF actually samples: the cumulative tail thresholds are rounded to the
+``t/256`` grid (``rng.cdf_thresholds_int``) and differenced back into
+per-value probabilities -- so oracle-vs-stochastic comparisons isolate the
+stochastic noise from the (documented, bounded) quantisation bias.  For a
+binary node this reduces to the classic ``round(p * 256) / 256``.
+
+Posterior layout mirrors the compiler: all-binary query sets keep the classic
+``(B, n_q)`` array of ``P(q=1)``; any k-ary query switches to ``(B, n_q,
+max_k)`` normalised per-value posteriors (zero-padded past each query's
+cardinality, uniform over the query's values where the evidence is
+impossible).
 """
 
 from __future__ import annotations
 
 import functools
+import math
 from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.bayesnet.spec import NetworkSpec
+from repro.core import rng
+
+_MAX_STATES = 1 << 20
 
 
-def _quantize(p: jnp.ndarray) -> jnp.ndarray:
-    """Snap probabilities to the SNE's 8-bit DAC grid (rng.threshold_from_p)."""
-    return jnp.clip(jnp.round(p * 256.0), 0.0, 256.0) / 256.0
+def _node_rows(spec: NetworkSpec, name: str, dac_quantize: bool) -> np.ndarray:
+    """(L, k) float32 canonical (optionally DAC-snapped) CPT rows."""
+    rows = spec.cpt_rows(name)
+    if dac_quantize:
+        snapped = []
+        for row in rows:
+            bounds = (256,) + rng.cdf_thresholds_int(row) + (0,)
+            snapped.append(
+                tuple((bounds[v] - bounds[v + 1]) / 256.0 for v in range(len(row)))
+            )
+        rows = tuple(snapped)
+    return np.asarray(rows, np.float32)
 
 
 def joint_table(spec: NetworkSpec, dac_quantize: bool = False):
-    """Returns (states (2**N, N) int32, joint (2**N,) float32).
+    """Returns (states (S, N) int32, joint (S,) float32), S = prod(cards).
 
-    Column ``j`` of ``states`` is the value of ``spec.nodes[j]``; ``joint`` is
-    the exact probability of each assignment under the network.
+    Column ``j`` of ``states`` is the value of ``spec.nodes[j]`` (node 0 is
+    the fastest-cycling mixed-radix digit, the k-ary generalisation of the
+    old bit grid); ``joint`` is the exact probability of each assignment.
     """
-    n = spec.n_nodes
-    if n > 20:
-        raise ValueError(f"enumeration oracle capped at 20 nodes, got {n}")
+    cards = spec.cards()
+    total = math.prod(cards)
+    if total > _MAX_STATES:
+        raise ValueError(
+            f"enumeration oracle capped at {_MAX_STATES} joint states, got {total}"
+        )
     idx = {node.name: j for j, node in enumerate(spec.nodes)}
-    states = (jnp.arange(1 << n, dtype=jnp.int32)[:, None] >> jnp.arange(n)) & 1
-    joint = jnp.ones((1 << n,), jnp.float32)
+    s = np.arange(total, dtype=np.int64)
+    cols = []
+    for c in cards:
+        cols.append((s % c).astype(np.int32))
+        s //= c
+    states = jnp.asarray(np.stack(cols, axis=-1))
+    joint = jnp.ones((total,), jnp.float32)
     for node in spec.nodes:
-        cpt = jnp.asarray(node.cpt, jnp.float32)
-        if dac_quantize:
-            cpt = _quantize(cpt)
-        m = len(node.parents)
-        # CPT row index: first parent is the most significant bit (spec.py).
-        row = jnp.zeros((1 << n,), jnp.int32)
-        for j, parent in enumerate(node.parents):
-            row = row | (states[:, idx[parent]] << (m - 1 - j))
-        p1 = cpt[row]
-        v = states[:, idx[node.name]]
-        joint = joint * jnp.where(v == 1, p1, 1.0 - p1)
+        cpt = jnp.asarray(_node_rows(spec, node.name, dac_quantize))
+        # Mixed-radix CPT row index: first parent is the most significant
+        # digit (spec.py convention).
+        row = jnp.zeros((total,), jnp.int32)
+        for parent in node.parents:
+            row = row * jnp.int32(spec.card(parent)) + states[:, idx[parent]]
+        joint = joint * cpt[row, states[:, idx[node.name]]]
     return states, joint
 
 
@@ -64,52 +92,82 @@ def make_posterior_fn(
 ) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]:
     """Compile the exact batched-posterior function for a spec.
 
-    Returns ``fn(ev_frames (B, n_ev) int) -> (post (B, n_q), p_evidence (B,))``
-    with ``post[b, q] = P(queries[q] = 1 | evidence = ev_frames[b])``, jitted
-    and fully vectorised over frames.  Frames columns follow the ``evidence``
-    order; ``p_evidence`` is the evidence marginal (0 where impossible, the
-    posterior then falls back to 0.5).
+    Returns ``fn(ev_frames (B, n_ev) int) -> (post, p_evidence (B,))`` with
+    the posterior layout described in the module docstring, jitted and fully
+    vectorised over frames.  Frames columns follow the ``evidence`` order and
+    hold one value in ``[0, card)`` per node; ``p_evidence`` is the evidence
+    marginal (0 where impossible; the posterior then falls back to 0.5 /
+    uniform).
     """
     queries = tuple(queries if queries is not None else spec.queries)
     evidence = tuple(evidence if evidence is not None else spec.evidence)
     states, joint = joint_table(spec, dac_quantize=dac_quantize)
     ev_cols = jnp.asarray([spec.index(e) for e in evidence], jnp.int32)
     q_cols = jnp.asarray([spec.index(q) for q in queries], jnp.int32)
+    q_cards = tuple(spec.card(q) for q in queries)
+    all_binary = all(c == 2 for c in q_cards)
+    kmax = max(q_cards) if q_cards else 2
 
     @jax.jit
     def posterior(ev_frames: jnp.ndarray):
         ev = jnp.asarray(ev_frames, jnp.int32)
         assert ev.ndim == 2 and ev.shape[1] == len(evidence), ev.shape
-        # (B, 2**N): does assignment s agree with frame b's evidence?
+        # (B, S): does assignment s agree with frame b's evidence?
         if len(evidence):
             match = jnp.all(states[None, :, ev_cols] == ev[:, None, :], axis=-1)
         else:
             match = jnp.ones((ev.shape[0], states.shape[0]), bool)
-        w = match.astype(jnp.float32) * joint[None, :]            # (B, 2**N)
+        w = match.astype(jnp.float32) * joint[None, :]            # (B, S)
         p_e = jnp.sum(w, axis=-1)                                 # (B,)
-        q_on = states[:, q_cols].astype(jnp.float32)              # (2**N, n_q)
-        num = w @ q_on                                            # (B, n_q)
-        post = jnp.where(p_e[:, None] > 0, num / jnp.maximum(p_e[:, None], 1e-30), 0.5)
-        return post, p_e
+        if all_binary:
+            q_on = states[:, q_cols].astype(jnp.float32)          # (S, n_q)
+            num = w @ q_on                                        # (B, n_q)
+            post = jnp.where(
+                p_e[:, None] > 0, num / jnp.maximum(p_e[:, None], 1e-30), 0.5
+            )
+            return post, p_e
+        posts = []
+        for qi, c in enumerate(q_cards):
+            onehot = (
+                states[:, q_cols[qi], None] == jnp.arange(kmax, dtype=jnp.int32)
+            ).astype(jnp.float32)                                 # (S, kmax)
+            num = w @ onehot                                      # (B, kmax)
+            fallback = jnp.asarray(
+                [1.0 / c if v < c else 0.0 for v in range(kmax)], jnp.float32
+            )
+            posts.append(
+                jnp.where(
+                    p_e[:, None] > 0,
+                    num / jnp.maximum(p_e[:, None], 1e-30),
+                    fallback[None, :],
+                )
+            )
+        return jnp.stack(posts, axis=1), p_e                      # (B, n_q, kmax)
 
     return posterior
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "batch"))
 def _sample_joint(spec: NetworkSpec, key: jax.Array, batch: int) -> jnp.ndarray:
-    """Ancestral sampling: (B, N) int32 samples in declared node order."""
+    """Ancestral sampling: (B, N) int32 values in declared node order."""
     idx = {node.name: j for j, node in enumerate(spec.nodes)}
     vals = [None] * spec.n_nodes
     for name in spec.topo_order():
         node = spec.node(name)
         key, sub = jax.random.split(key)
-        cpt = jnp.asarray(node.cpt, jnp.float32)
-        m = len(node.parents)
+        # (L, k-1) cumulative tails: value = #{v : u < P(value >= v)} -- the
+        # float twin of the DAC CDF sampler (binary: one column equal to p1).
+        rows = np.asarray(spec.cpt_rows(name), np.float32)
+        tails = jnp.asarray(
+            np.cumsum(rows[:, ::-1], axis=-1)[:, ::-1][:, 1:], jnp.float32
+        )
         row = jnp.zeros((batch,), jnp.int32)
-        for j, parent in enumerate(node.parents):
-            row = row | (vals[idx[parent]] << (m - 1 - j))
+        for parent in node.parents:
+            row = row * jnp.int32(spec.card(parent)) + vals[idx[parent]]
         u = jax.random.uniform(sub, (batch,))
-        vals[idx[name]] = (u < cpt[row]).astype(jnp.int32)
+        vals[idx[name]] = jnp.sum(
+            (u[:, None] < tails[row]).astype(jnp.int32), axis=-1
+        )
     return jnp.stack(vals, axis=-1)
 
 

@@ -1,44 +1,45 @@
 """Compile a :class:`~repro.bayesnet.spec.NetworkSpec` to the packed domain.
 
-Two lowerings share the spec language:
+Nodes are cardinality-``k`` categorical variables carried as ``value_bits(k)``
+packed bit-plane streams (binary = the one-plane ``k=2`` special case, bit
+identical to the pre-categorical lowering).  Two lowerings share the spec
+language:
 
 **Fused** (production default for independent entropy): the whole network --
-per-node threshold-gather sampling, evidence-indicator AND, CORDIV popcount
-fixed point -- becomes ONE :func:`~repro.kernels.net_sweep.net_sweep` launch.
-Entropy is generated in-register from counter bit-planes with the frame index
-folded into the counters, so every frame draws an independent joint sample
-(exactly what the physical memristor array provides for free) and node
-streams never touch HBM.  This is what closed the former ~70x
-``share_entropy=False`` cliff.
+per-node categorical threshold-gather sampling, evidence-indicator AND, CORDIV
+popcount fixed point -- becomes ONE :func:`~repro.kernels.net_sweep.net_sweep`
+launch.  Entropy is generated in-register from counter bit-planes with the
+frame index folded into the counters (ONE byte per stream position regardless
+of cardinality), so every frame draws an independent joint sample and node
+streams never touch HBM.
 
 **Unfused** (one op per node; the verification baseline, and the only path
 for shared entropy or the ``fill`` estimator):
 
-* root nodes      -> independent packed Bernoulli streams (``rng.encode_packed``,
-  the counter-entropy SNE).
-* non-root nodes  -> the :func:`~repro.kernels.node_mux.node_mux` sweep.  The
-  default ``mux_mode='gather'`` selects the node's 8-bit DAC threshold by the
-  parents' packed bits and compares one entropy byte per stream bit;
-  ``mux_mode='rows'`` is the original formulation (fresh entropy per CPT row
-  routed through the value-select MUX tree) kept as the statistical baseline.
-  Either way, at every bit position the vector of all node bits is an exact
-  joint sample of the network -- the n-ary generalisation of the Fig S8
-  motifs.
-* queries         -> stochastic conditioning: the evidence indicator streams
-  (a node stream, or its packed NOT for evidence value 0) are ANDed into the
-  acceptance stream ``d``; each query's numerator is ``d AND S_q``, a bitwise
-  subset of ``d`` by construction, so CORDIV's correlation discipline holds
-  with no superset completion.  ``estimator='ratio'`` uses the closed-form
-  ``cordiv_ratio`` popcount fixed point; ``estimator='fill'`` runs the
-  word-parallel ``cordiv_fill`` flip-flop circuit (bit-faithful to the serial
-  divider).
+* binary roots     -> independent packed Bernoulli streams (``rng.encode_packed``).
+* k-ary roots      -> ``rng.encode_packed_categorical`` (same entropy words,
+  ``k-1`` comparisons, ``value_bits(k)`` planes).
+* all-binary nodes -> the :func:`~repro.kernels.node_mux.node_mux` sweep
+  (``mux_mode='gather'`` default; ``mux_mode='rows'`` is the original
+  formulation kept as the binary statistical baseline).
+* k-ary nodes (or binary nodes with k-ary parents)
+                   -> :func:`~repro.kernels.node_mux.node_mux_categorical`:
+  the parents' value digits gather the row's 8-bit DAC CDF, one entropy byte
+  samples the k-way draw.
+* queries          -> stochastic conditioning: per-evidence-node value
+  indicators (AND of plane literals) are ANDed into the acceptance stream
+  ``d``; each query *value* indicator ANDed with ``d`` is a bitwise subset of
+  ``d`` by construction, so CORDIV's correlation discipline holds.
+  ``estimator='ratio'`` uses the closed-form popcount fixed point;
+  ``estimator='fill'`` runs the word-parallel ``cordiv_fill`` flip-flop
+  circuit per value slot.
 
-The compiled program is one jitted function.  ``share_entropy=False`` (the
-default) gives every frame an independent joint sample -- independent errors
-across frames, the mode a deployment should run.  ``share_entropy=True``
-builds the node streams once per launch and every frame conditions the *same*
-joint sample: cheaper still for huge batches, but frame errors are maximally
-correlated.
+Posterior contract: when every query node is binary, ``run`` returns the
+classic ``(B, n_q)`` array of ``P(q=1 | evidence)`` -- bit-identical to the
+pre-categorical compiler.  When any query has ``k > 2``, ``run`` returns a
+``(B, n_q, max_k)`` tensor of normalised per-value posteriors (rows of
+queries with smaller cardinality are zero-padded).  ``decide`` reduces either
+form to per-query argmax values through the fused ``bayes_decide`` op.
 """
 
 from __future__ import annotations
@@ -51,24 +52,62 @@ import jax.numpy as jnp
 
 from repro.bayesnet.spec import NetworkSpec
 from repro.core import bitops, cordiv, rng
+from repro.kernels.bayes_decide import bayes_decide
 from repro.kernels.net_sweep import SweepPlan, net_sweep
-from repro.kernels.node_mux.ops import node_mux
+from repro.kernels.node_mux.ops import node_mux, node_mux_categorical
 
 
 def _posterior_from_counts(numer: jnp.ndarray, denom: jnp.ndarray) -> jnp.ndarray:
-    """Per-frame posteriors from count arrays: numer (B, n_q), denom (B,)."""
+    """Per-frame posteriors from count arrays: numer (B, n_s), denom (B,)."""
     return cordiv.ratio_from_counts(numer, denom[:, None])
+
+
+def _slot_assembler(q_cards: Tuple[int, ...]) -> Callable:
+    """Build the slot-probabilities -> posterior map for a query card profile.
+
+    Slots hold ``P(q = v | e)`` for values ``1 .. k-1`` per query, in query
+    order.  All-binary queries keep the classic ``(B, n_q)`` layout (the slot
+    array IS the posterior, bit-identical to the pre-categorical path);
+    otherwise the slots fold into ``(B, n_q, max_k)`` with
+    ``P(q = 0) = 1 - sum`` and zero padding past each query's cardinality.
+    """
+    if all(c == 2 for c in q_cards):
+        return lambda slots: slots
+    kmax = max(q_cards)
+
+    def assemble(slots: jnp.ndarray) -> jnp.ndarray:
+        cols = []
+        off = 0
+        for c in q_cards:
+            v = slots[:, off : off + c - 1]
+            off += c - 1
+            s = jnp.sum(v, axis=-1, keepdims=True)
+            p0 = jnp.clip(1.0 - s, 0.0, 1.0)
+            parts = [p0, v]
+            if kmax > c:
+                parts.append(jnp.zeros(v.shape[:-1] + (kmax - c,), v.dtype))
+            # Ratio-estimator slots are disjoint-bucket count fractions, so
+            # s <= 1 exactly and the divisor is literally 1.0; the fill
+            # estimator's slots are independent stochastic divisions whose
+            # noise can push s past 1 -- rescale so the vector stays a
+            # distribution either way.
+            cols.append(jnp.concatenate(parts, axis=-1) / jnp.maximum(s, 1.0))
+        return jnp.stack(cols, axis=1)
+
+    return assemble
 
 
 @dataclasses.dataclass(frozen=True)
 class CompiledNetwork:
     """A network lowered to one jitted packed-stochastic program.
 
-    ``run(key, ev_frames (B, n_ev) int) -> (post (B, n_q), accepted (B,))``:
-    ``post[b, q]`` estimates ``P(queries[q]=1 | evidence = ev_frames[b])`` and
-    ``accepted[b]`` is the number of stream bits that satisfied frame ``b``'s
-    evidence -- the effective sample count, so callers can bound the noise as
-    ``sigma ~ sqrt(p (1-p) / accepted)``.
+    ``run(key, ev_frames (B, n_ev) int) -> (post, accepted (B,))``: evidence
+    values are integers in ``[0, card)`` per evidence node.  ``post`` is
+    ``(B, n_q)`` of ``P(q=1 | evidence)`` when every query is binary, else
+    ``(B, n_q, max(query_cards))`` of normalised per-value posteriors.
+    ``accepted[b]`` is the number of stream positions that satisfied frame
+    ``b``'s evidence -- the effective sample count, so callers can bound the
+    noise as ``sigma ~ sqrt(p (1-p) / accepted)``.
     """
 
     spec: NetworkSpec
@@ -78,6 +117,7 @@ class CompiledNetwork:
     share_entropy: bool
     estimator: str
     fused: bool
+    query_cards: Tuple[int, ...]
     _run: Callable = dataclasses.field(repr=False)
 
     def run(self, key: jax.Array, ev_frames) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -88,6 +128,24 @@ class CompiledNetwork:
             )
         return self._run(key, ev)
 
+    def decide(
+        self, key: jax.Array, ev_frames, decide_bits: int = 256
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-frame argmax value for every query via the fused decision op.
+
+        Runs the compiled program, re-encodes each query's posterior vector as
+        packed streams, and lets :func:`~repro.kernels.bayes_decide` take the
+        popcount argmax -- the stochastic decision layer the paper's output
+        stage implements.  Returns ``(decisions (B, n_q) int32, accepted)``.
+        """
+        post, accepted = self.run(key, ev_frames)
+        if post.ndim == 2:  # all-binary queries: (B, n_q) -> per-value vectors
+            post = jnp.stack([1.0 - post, post], axis=-1)
+        dec, _ = bayes_decide(
+            jax.random.fold_in(key, 0x5EED), post[None], n_bits=decide_bits
+        )
+        return dec, accepted
+
 
 def sweep_plan(
     spec: NetworkSpec,
@@ -96,17 +154,19 @@ def sweep_plan(
 ) -> SweepPlan:
     """Lower a spec to the static :class:`SweepPlan` the fused kernel consumes.
 
-    Nodes are renumbered into topological order; thresholds are the 8-bit DAC
-    comparator values (``round(p * 256)``, the same grid every other encoder
-    uses), so the fused sweep samples the identical quantised network.
+    Nodes are renumbered into topological order; each CPT row becomes its
+    ``card - 1`` cumulative 8-bit DAC comparator thresholds
+    (``rng.cdf_thresholds_int`` -- for binary nodes exactly the old
+    ``round(p * 256)`` grid), so the fused sweep samples the identical
+    quantised network every other encoder does.
     """
     order = spec.topo_order()
     index = {name: i for i, name in enumerate(order)}
     nodes = []
     for name in order:
         node = spec.node(name)
-        thresh = tuple(rng.threshold_int(p) for p in node.cpt)
-        nodes.append((tuple(index[p] for p in node.parents), thresh))
+        rows = tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name))
+        nodes.append((tuple(index[p] for p in node.parents), spec.card(name), rows))
     return SweepPlan(
         nodes=tuple(nodes),
         evidence=tuple(index[e] for e in evidence),
@@ -124,32 +184,61 @@ def lower_streams(
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ):
-    """One topological sweep: name -> packed stream ((W,) or (B, W)).
+    """One topological sweep: name -> tuple of packed value bit-planes.
 
-    The per-node subkey comes from ``fold_in(key, node index)``, so every node
-    draws disjoint counter entropy while parents' streams are shared by all
+    Every entry is a ``value_bits(k)``-tuple of ``(W,)`` (or ``(B, W)``)
+    packed words; a binary node's tuple holds its classic single stream.  The
+    per-node subkey comes from ``fold_in(key, node index)``, so every node
+    draws disjoint counter entropy while parents' planes are shared by all
     their children exactly once -- the correlation structure the joint sample
-    requires.
+    requires.  Binary sub-networks draw entropy through exactly the
+    pre-categorical code path, keeping their streams bit-identical.
     """
     order = spec.topo_order()
     streams = {}
     for i, name in enumerate(order):
         node = spec.node(name)
+        card = spec.card(name)
+        pcards = tuple(spec.card(p) for p in node.parents)
         sub = jax.random.fold_in(key, i)
         if not node.parents:
-            p = jnp.float32(node.cpt[0])
-            if batch is not None:
-                p = jnp.full((batch,), p, jnp.float32)
-            streams[name] = rng.encode_packed(sub, p, n_bits)
-        else:
-            cpt = jnp.asarray(node.cpt, jnp.float32)
+            if card == 2:
+                p = jnp.float32(spec.cpt_rows(name)[0][1])
+                if batch is not None:
+                    p = jnp.full((batch,), p, jnp.float32)
+                streams[name] = (rng.encode_packed(sub, p, n_bits),)
+            else:
+                cdf = rng.cdf_thresholds_int(spec.cpt_rows(name)[0])
+                planes = rng.encode_packed_categorical(sub, cdf, n_bits, batch=batch)
+                streams[name] = tuple(planes[b] for b in range(planes.shape[0]))
+        elif card == 2 and all(c == 2 for c in pcards):
+            cpt = jnp.asarray(
+                tuple(r[1] for r in spec.cpt_rows(name)), jnp.float32
+            )
             if batch is not None:
                 cpt = jnp.broadcast_to(cpt, (batch,) + cpt.shape)
-            parents = jnp.stack([streams[pn] for pn in node.parents])
-            streams[name] = node_mux(
-                sub, cpt, parents, n_bits, mode=mux_mode,
+            parents = jnp.stack([streams[pn][0] for pn in node.parents])
+            streams[name] = (
+                node_mux(
+                    sub, cpt, parents, n_bits, mode=mux_mode,
+                    use_kernel=use_kernel, interpret=interpret,
+                ),
+            )
+        else:
+            cdf = jnp.asarray(
+                tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name)),
+                jnp.uint32,
+            )
+            if batch is not None:
+                cdf = jnp.broadcast_to(cdf, (batch,) + cdf.shape)
+            parents = jnp.stack(
+                [pl for pn in node.parents for pl in streams[pn]]
+            )
+            planes = node_mux_categorical(
+                sub, cdf, parents, cards=(card,) + pcards, n_bits=n_bits,
                 use_kernel=use_kernel, interpret=interpret,
             )
+            streams[name] = tuple(planes[b] for b in range(planes.shape[0]))
     return streams
 
 
@@ -183,6 +272,13 @@ def compile_network(
         raise ValueError("n_bits must be a multiple of 32 (packed words)")
     if mux_mode not in ("gather", "rows"):
         raise ValueError(f"unknown mux_mode {mux_mode!r}")
+    if mux_mode == "rows" and spec.max_card() > 2:
+        raise ValueError(
+            "mux_mode='rows' (the binary row-encode baseline) does not "
+            "support k-ary nodes; use the default 'gather'"
+        )
+    q_cards = tuple(spec.card(q) for q in queries)
+    assemble = _slot_assembler(q_cards)
     # The fused sweep samples with threshold-gather by construction, so a
     # non-default mux_mode is an explicit request for the unfused per-node
     # lowering -- auto-resolution honours it instead of silently ignoring it.
@@ -206,45 +302,60 @@ def compile_network(
                 key, ev_frames, plan=plan, n_bits=n_bits,
                 use_kernel=use_kernel, interpret=interpret,
             )
-            return _posterior_from_counts(numer, denom), denom
+            return assemble(_posterior_from_counts(numer, denom)), denom
 
         return CompiledNetwork(
             spec=spec, queries=queries, evidence=evidence, n_bits=n_bits,
             share_entropy=share_entropy, estimator=estimator, fused=True,
-            _run=_run,
+            query_cards=q_cards, _run=_run,
         )
 
-    def one_frame(ev, ev_streams, q_streams):
-        """ev (n_ev,), ev_streams (n_ev, W), q_streams (n_q, W)."""
-        denom = jnp.broadcast_to(mask, q_streams.shape[-1:])
+    def slot_indicators(streams):
+        """Per-query per-value (1..k-1) indicator streams, slot order."""
+        slots = []
+        for q, c in zip(queries, q_cards):
+            pls = streams[q]
+            if c == 2:
+                slots.append(pls[0])
+            else:
+                for v in range(1, c):
+                    slots.append(bitops.digit_indicator(pls, v))
+        return tuple(slots)
+
+    def one_frame(ev, ev_planes, slot_streams):
+        """ev (n_ev,); ev_planes: per-evidence plane tuples; slots (n_s, W)."""
+        denom = jnp.broadcast_to(mask, mask.shape)
         for i in range(len(evidence)):
-            # indicator: the node stream for e=1, its packed NOT for e=0
-            ind = ev_streams[i] ^ jnp.where(ev[i] == 1, jnp.uint32(0), mask)
-            denom = denom & ind
-        numer = q_streams & denom[None, :]
+            for b, s in enumerate(ev_planes[i]):
+                # value indicator, plane literal at a time (binary: the node
+                # stream for e=1, its packed NOT for e=0)
+                term = s ^ jnp.where(((ev[i] >> b) & 1) == 1, jnp.uint32(0), mask)
+                denom = denom & term
+        numer = jnp.stack(slot_streams) & denom[None, :]
         _, post = cordiv.cordiv_fill(numer, denom[None, :], n_bits)
         return post, bitops.popcount(denom)
 
-    def ratio_batched(ev_frames, ev_s, q_s):
+    def ratio_batched(ev_frames, ev_planes, slot_streams):
         """Straight-line batched conditioning for the ratio estimator.
 
         Computes ``cordiv_ratio`` -- popcount(numer) / popcount(denom) over
         the same acceptance stream ``one_frame`` builds -- with indicators
         broadcast across the frame axis instead of per-frame ``vmap``
-        closures (~1.4x faster).  ev_s/q_s are (n, W) shared or (n, B, W)
-        independent streams.
+        closures.  Plane arrays are (W,) shared or (B, W) independent.
         """
         b = ev_frames.shape[0]
         accept = jnp.broadcast_to(mask, (b, mask.shape[0]))
         for i in range(len(evidence)):
-            s = ev_s[i] if ev_s[i].ndim == 2 else ev_s[i][None, :]
-            ind = s ^ jnp.where(ev_frames[:, i : i + 1] == 1, jnp.uint32(0), mask[None, :])
-            accept = accept & ind
+            for bit, s in enumerate(ev_planes[i]):
+                s = s if s.ndim == 2 else s[None, :]
+                ebit = (ev_frames[:, i : i + 1] >> bit) & 1
+                ind = s ^ jnp.where(ebit == 1, jnp.uint32(0), mask[None, :])
+                accept = accept & ind
         denom = bitops.popcount(accept)
         numer = jnp.stack(
             [
-                bitops.popcount(accept & (q if q.ndim == 2 else q[None, :]))
-                for q in q_s
+                bitops.popcount(accept & (s if s.ndim == 2 else s[None, :]))
+                for s in slot_streams
             ],
             axis=-1,
         )
@@ -257,20 +368,22 @@ def compile_network(
             spec, key, n_bits, batch=None if share_entropy else b,
             mux_mode=mux_mode, use_kernel=use_kernel, interpret=interpret,
         )
-        ev_s = jnp.stack([streams[e] for e in evidence]) if evidence else \
-            jnp.zeros((0,) + next(iter(streams.values())).shape, jnp.uint32)
-        q_s = jnp.stack([streams[q] for q in queries])
+        ev_planes = tuple(streams[e] for e in evidence)
+        slots = slot_indicators(streams)
         if estimator == "ratio":
-            return ratio_batched(ev_frames, ev_s, q_s)
+            post, denom = ratio_batched(ev_frames, ev_planes, slots)
+            return assemble(post), denom
         if share_entropy:
-            return jax.vmap(one_frame, in_axes=(0, None, None))(ev_frames, ev_s, q_s)
-        # independent entropy: streams carry a leading frame axis
-        ev_s = jnp.moveaxis(ev_s, 1, 0)                  # (B, n_ev, W)
-        q_s = jnp.moveaxis(q_s, 1, 0)                    # (B, n_q, W)
-        return jax.vmap(one_frame)(ev_frames, ev_s, q_s)
+            post, denom = jax.vmap(one_frame, in_axes=(0, None, None))(
+                ev_frames, ev_planes, slots
+            )
+        else:
+            # independent entropy: every plane carries a leading frame axis
+            post, denom = jax.vmap(one_frame)(ev_frames, ev_planes, slots)
+        return assemble(post), denom
 
     return CompiledNetwork(
         spec=spec, queries=queries, evidence=evidence, n_bits=n_bits,
         share_entropy=share_entropy, estimator=estimator, fused=False,
-        _run=_run,
+        query_cards=q_cards, _run=_run,
     )

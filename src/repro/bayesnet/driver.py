@@ -13,15 +13,21 @@ never share errors -- the padding frames simply burn a little extra entropy.
 The driver also sequences launch keys itself: pass ``key=None`` to ``step`` /
 ``drain`` and each launch folds a monotonically increasing launch counter into
 the driver's base key, so successive launches draw disjoint entropy without
-the caller threading PRNG state.  The default base key is ``PRNGKey(0)`` --
-deterministic by design (replayable launches, like every other default key in
-this repo) -- so deployments running several drivers, or restarting one, must
-pass distinct ``base_key`` values or the drivers will draw bit-identical
-joint samples per launch index.
+the caller threading PRNG state.
+
+Every driver additionally folds a ``salt`` into its base key.  ``salt=None``
+(the default) takes the next value of a process-wide driver counter, so two
+drivers constructed with defaults -- the footgun the old ``PRNGKey(0)``
+default base key armed -- no longer draw bit-identical joint samples per
+launch index.  Pass an explicit ``salt`` (a driver id) to make a driver's key
+sequence reproducible across processes/restarts: drivers with the same
+``(base_key, salt)`` replay the same launches, drivers differing in either
+draw disjoint entropy.
 """
 
 from __future__ import annotations
 
+import itertools
 from collections import deque
 from typing import Dict, List, Tuple
 
@@ -30,6 +36,9 @@ import numpy as np
 
 from repro.bayesnet.compile import CompiledNetwork
 
+# Process-wide source of default driver salts (one per construction).
+_DRIVER_IDS = itertools.count()
+
 
 class FrameDriver:
     def __init__(
@@ -37,12 +46,15 @@ class FrameDriver:
         net: CompiledNetwork,
         max_batch: int = 256,
         base_key: jax.Array | None = None,
+        salt: int | None = None,
     ):
         self.net = net
         self.max_batch = int(max_batch)
         self._queue: deque = deque()
         self._next_rid = 0
-        self._base_key = base_key if base_key is not None else jax.random.PRNGKey(0)
+        self.salt = next(_DRIVER_IDS) if salt is None else int(salt)
+        base = base_key if base_key is not None else jax.random.PRNGKey(0)
+        self._base_key = jax.random.fold_in(base, self.salt)
         self._launches = 0
 
     # ------------------------------------------------------------- admission

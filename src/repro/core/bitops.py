@@ -97,3 +97,65 @@ def bmux(select: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     ``P(out) = (1 - P(s)) P(a) + P(s) P(b)`` (Table S1, Fig S6a).
     """
     return (select & b) | (~select & a)
+
+
+# --- categorical value bit-planes (DESIGN.md §10) ----------------------------------
+#
+# A cardinality-k stochastic variable is carried as ``value_bits(k)`` packed
+# words: plane ``b`` holds bit ``b`` of the sampled value at every stream
+# position.  Binary variables are the k=2 special case -- one plane, identical
+# to the classic packed stream -- so every bitwise gate above applies
+# unchanged to each plane.
+
+def value_bits(k: int) -> int:
+    """Packed bit-planes needed to carry a cardinality-``k`` value (>= 1)."""
+    if k < 2:
+        raise ValueError(f"cardinality must be >= 2, got {k}")
+    return (k - 1).bit_length()
+
+
+def nested_buckets(levels):
+    """Nested threshold indicators -> exclusive per-value bucket words.
+
+    ``levels[v-1]`` is the packed indicator of ``value >= v`` (v = 1..k-1);
+    nesting (``levels[v] subset levels[v-1]``) is guaranteed by the
+    non-increasing CDF thresholds.  Returns the k-1 exclusive indicators of
+    ``value == v`` for v = 1..k-1 (``value == 0`` is the complement of
+    ``levels[0]``).  For k=2 this is ``levels`` itself -- zero extra gates.
+    """
+    k = len(levels) + 1
+    return [levels[v - 1] if v == k - 1 else levels[v - 1] & ~levels[v]
+            for v in range(1, k)]
+
+
+def planes_from_buckets(buckets):
+    """Exclusive value buckets (v = 1..k-1) -> ``value_bits(k)`` bit-planes."""
+    k = len(buckets) + 1
+    planes = []
+    for b in range(value_bits(k)):
+        sel = [buckets[v - 1] for v in range(1, k) if (v >> b) & 1]
+        acc = sel[0]
+        for s in sel[1:]:
+            acc = acc | s
+        planes.append(acc)
+    return planes
+
+
+def value_planes(levels):
+    """Nested ``value >= v`` indicators -> binary value bit-planes."""
+    return planes_from_buckets(nested_buckets(levels))
+
+
+def digit_indicator(planes, d: int) -> jnp.ndarray:
+    """Packed indicator of ``value == d`` from its value bit-planes.
+
+    For a binary variable (one plane) this is the plane itself (d=1) or its
+    complement (d=0) -- the classic parent literal.  NOTE: the d=0 literal of
+    a single-plane variable complements pad bits too; AND the result into a
+    pad-masked acceptance stream before popcounting.
+    """
+    acc = None
+    for b, pl in enumerate(planes):
+        lit = pl if (d >> b) & 1 else ~pl
+        acc = lit if acc is None else acc & lit
+    return acc

@@ -55,6 +55,30 @@ def threshold_int(p: float) -> int:
     return int(np.clip(np.round(np.float32(p) * 256.0), 0.0, 256.0))
 
 
+def cdf_thresholds_int(probs) -> tuple:
+    """Per-value probabilities ``(p_0, .., p_{k-1})`` -> ``(k-1,)`` cumulative
+    8-bit DAC thresholds, evaluated at trace time (Python floats in, ints out).
+
+    Threshold ``C_v`` encodes ``P(value >= v)``: one entropy byte samples the
+    whole categorical draw as ``value = #{v : byte < C_v}``.  Tail sums are
+    non-increasing, so the rounded thresholds are too (enforced defensively) --
+    the nesting the bit-sliced comparator chain relies on.  For k=2 the single
+    threshold is exactly :func:`threshold_int` of ``P(value=1)``, which keeps
+    binary nodes bit-identical to the scalar-threshold lowering.
+    """
+    k = len(probs)
+    if k < 2:
+        raise ValueError(f"need >= 2 value probabilities, got {k}")
+    out = []
+    prev = 256
+    for v in range(1, k):
+        tail = float(np.sum(np.asarray(probs[v:], np.float64)))
+        t = min(threshold_int(tail), prev)
+        out.append(t)
+        prev = t
+    return tuple(out)
+
+
 def n_rand_words(n_bits: int) -> int:
     """uint32 entropy words needed for ``n_bits`` stream bits (word-padded)."""
     return bitops.n_words(n_bits) * RAND_WORDS_PER_OUT_WORD
@@ -237,6 +261,34 @@ def encode_packed_correlated(
     rand = random_words(key, p.shape[:-1] + (1,), n_bits, impl=impl)
     flip = None if negate is None else jnp.asarray(negate, bool)
     return _mask_tail(packed_from_bytes(rand, threshold_from_p(p), flip), n_bits)
+
+
+def encode_packed_categorical(
+    key: jax.Array,
+    cdf: tuple,
+    n_bits: int,
+    batch: int | None = None,
+    impl: str = "fast",
+) -> jnp.ndarray:
+    """Categorical root sampling: one entropy byte -> ``value_bits(k)`` planes.
+
+    cdf: static ``(k-1,)`` non-increasing cumulative thresholds in [0, 256]
+    (:func:`cdf_thresholds_int`).  Draws the SAME entropy a binary
+    :func:`encode_packed` of matching shape would (one byte per stream bit --
+    the categorical draw is free after the first comparison), compares it
+    against every threshold, and packs the sampled value's bit-planes.
+
+    Returns ``(value_bits(k), n_words)`` uint32, or with a leading batch axis
+    inserted after the plane axis when ``batch`` is given:
+    ``(value_bits(k), batch, n_words)``.
+    """
+    lead = () if batch is None else (batch,)
+    rand = random_words(key, lead, n_bits, impl=impl)
+    levels = [
+        packed_from_bytes(rand, jnp.uint32(t)) for t in cdf
+    ]
+    planes = bitops.value_planes(levels)
+    return jnp.stack([_mask_tail(p, n_bits) for p in planes])
 
 
 def fair_bits(key: jax.Array, shape: tuple, n_bits: int, impl: str = "fast") -> jnp.ndarray:

@@ -1,35 +1,40 @@
 """Shared bit-sliced sweep body for the fused whole-network op.
 
 ``SweepPlan`` is the static (hashable) description of one compiled network:
-per-node parent indices and 8-bit DAC thresholds in topological order, plus
-the evidence/query node sets.  ``sweep_tile`` runs the full topological sweep
-for one ``(frames x words)`` tile and returns the popcount partials -- it is
-the single source of truth for the fused semantics, called on the whole array
-by the jnp reference and per-tile by the Pallas kernel, which makes the two
-bit-identical by construction (the kernel tests then pin the tiling and
-accumulation).
+per-node parent indices, cardinality, and per-row 8-bit DAC **CDF thresholds**
+in topological order, plus the evidence/query node sets.  ``sweep_tile`` runs
+the full topological sweep for one ``(frames x words)`` tile and returns the
+popcount partials -- it is the single source of truth for the fused semantics,
+called on the whole array by the jnp reference and per-tile by the Pallas
+kernel, which makes the two bit-identical by construction (the kernel tests
+then pin the tiling and accumulation).
 
-Node sampling is the threshold-gather formulation in bit-sliced form: entropy
-arrives as 8 *bit-planes* per output word (``rng.plane_base`` /
-``rng.plane_word``), the parent-gathered threshold becomes 8 per-plane mask
-words (an OR of parent-literal indicator words for every CPT row whose
-threshold has that bit set -- constant-folded at trace time because the
-thresholds are static), and ``byte < threshold`` runs as a borrow chain over
-the planes.  Planes below the lowest set threshold bit of a node can never
-flip the comparison and are skipped entirely, so a node costs at most
-``1 + planes`` hashes per output word instead of ``2 * 8 * 2**m``.
+Node sampling is the categorical threshold-gather formulation in bit-sliced
+form: entropy arrives as 8 *bit-planes* per output word (``rng.plane_base`` /
+``rng.plane_word``) -- ONE byte per stream position regardless of cardinality.
+A cardinality-``k`` node carries ``k-1`` non-increasing cumulative thresholds
+per CPT row (``C_v`` encodes ``P(value >= v)``); each threshold's gathered
+per-plane mask words (an OR of parent-digit indicator words for every CPT row
+whose threshold has that bit set -- constant-folded at trace time) feed the
+borrow-chain comparator, the ``k-1`` chains share the node's 8 entropy planes,
+and the sampled value ``#{v : byte < C_v}`` is re-packed as ``value_bits(k)``
+bit-planes.  Planes below the lowest set threshold bit of a node can never
+flip any comparison and are skipped entirely.  Binary nodes (``k=2``) collapse
+to exactly the single-chain lowering -- one threshold, one plane, bit-identical
+streams.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rng
+from repro.core import bitops, rng
 
 # np scalar (not a committed jax array): Pallas kernels cannot close over
 # device constants, and np scalars fold into jaxpr literals.
@@ -40,57 +45,151 @@ _FULL = np.uint32(0xFFFFFFFF)
 _ONES = object()
 
 
+def _normalize_node(entry):
+    """Accept the legacy ``(parents, scalar thresholds)`` node form.
+
+    Pre-categorical plans carried one 8-bit threshold per CPT row (binary
+    nodes only); they normalise to cardinality 2 with one-level CDF rows, so
+    existing plan constructions keep working unchanged.
+    """
+    if len(entry) == 2:
+        parents, thresh = entry
+        return (tuple(parents), 2, tuple((int(t),) for t in thresh))
+    parents, card, rows = entry
+    return (tuple(parents), int(card), tuple(tuple(int(t) for t in r) for r in rows))
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepPlan:
-    """Static lowering of a binary-DAG network for the fused sweep.
+    """Static lowering of a k-ary DAG network for the fused sweep.
 
-    nodes:    per node (in topological order) a pair ``(parents, thresh)``:
-              ``parents`` are indices of earlier nodes (first parent = most
-              significant CPT row bit), ``thresh`` are the ``2**m`` 8-bit DAC
-              comparator thresholds in ``[0, 256]`` (``rng.threshold_from_p``).
-    evidence: node index per evidence frame column.
-    queries:  node index per posterior output column.
+    nodes:    per node (in topological order) a triple ``(parents, card,
+              rows)``: ``parents`` are indices of earlier nodes (first parent
+              = most significant mixed-radix CPT row digit), ``card`` is the
+              node's cardinality, and ``rows`` holds one ``(card - 1,)`` tuple
+              of non-increasing cumulative 8-bit DAC thresholds in [0, 256]
+              per parent assignment (``rng.cdf_thresholds_int``).  The legacy
+              binary pair form ``(parents, thresholds)`` is normalised on
+              construction.
+    evidence: node index per evidence frame column (values in ``[0, card)``).
+    queries:  node index per posterior output; each query of cardinality k
+              contributes ``k - 1`` numerator slots (values ``1 .. k-1``; the
+              value-0 count is ``denom`` minus their sum).
     """
 
-    nodes: Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]], ...]
+    nodes: Tuple
     evidence: Tuple[int, ...]
     queries: Tuple[int, ...]
 
     def __post_init__(self):
-        for i, (parents, thresh) in enumerate(self.nodes):
-            if len(thresh) != 1 << len(parents):
-                raise ValueError(
-                    f"node {i}: {len(parents)} parents need {1 << len(parents)} "
-                    f"thresholds, got {len(thresh)}"
-                )
+        object.__setattr__(
+            self, "nodes", tuple(_normalize_node(e) for e in self.nodes)
+        )
+        object.__setattr__(self, "evidence", tuple(self.evidence))
+        object.__setattr__(self, "queries", tuple(self.queries))
+        for i, (parents, card, rows) in enumerate(self.nodes):
+            if card < 2:
+                raise ValueError(f"node {i}: cardinality {card} < 2")
             for p in parents:
                 if not 0 <= p < i:
                     raise ValueError(f"node {i}: parent {p} not earlier in topo order")
-            for t in thresh:
-                if not 0 <= t <= 256:
-                    raise ValueError(f"node {i}: threshold {t} outside [0, 256]")
+            expect = math.prod(self.nodes[p][1] for p in parents)
+            if len(rows) != expect:
+                raise ValueError(
+                    f"node {i}: {len(parents)} parents of cardinalities "
+                    f"{tuple(self.nodes[p][1] for p in parents)} need {expect} "
+                    f"CPT rows, got {len(rows)}"
+                )
+            for row in rows:
+                if len(row) != card - 1:
+                    raise ValueError(
+                        f"node {i}: CDF row {row} needs {card - 1} thresholds"
+                    )
+                prev = 256
+                for t in row:
+                    if not 0 <= t <= 256:
+                        raise ValueError(f"node {i}: threshold {t} outside [0, 256]")
+                    if t > prev:
+                        raise ValueError(
+                            f"node {i}: CDF thresholds {row} not non-increasing"
+                        )
+                    prev = t
         for n in self.evidence + self.queries:
             if not 0 <= n < len(self.nodes):
                 raise ValueError(f"evidence/query node {n} out of range")
         if not self.queries:
             raise ValueError("SweepPlan needs at least one query node")
 
+    # ------------------------------------------------------------- accessors
+    def card(self, i: int) -> int:
+        return self.nodes[i][1]
 
-def _indicator_or(indicators, selected, length):
-    """OR of the selected CPT-row indicator words, constant-folded."""
-    if not selected:
-        return None
-    if len(selected) == length:
-        return _ONES
-    acc = indicators[selected[0]]
-    for l in selected[1:]:
-        acc = acc | indicators[l]
-    return acc
+    @property
+    def n_value_slots(self) -> int:
+        """Numerator count columns: ``sum(card - 1)`` over the query nodes."""
+        return sum(self.nodes[q][1] - 1 for q in self.queries)
 
 
-def _node_stream(base, kd1, thresh_masks, hi, shape):
+class _RowSetGather:
+    """Trace-time-factored OR of CPT-row indicators for one node.
+
+    A threshold-bit mask is the indicator of a *set* of CPT rows.  Building it
+    as a flat OR of per-row AND-of-literals words costs ``O(L * m)`` ops per
+    mask; factoring the set parent-by-parent (a digit ``d`` whose whole
+    sub-space is selected contributes just the digit indicator) and memoising
+    the recursive sub-sets -- which repeat heavily across the ``8 * (card-1)``
+    masks of a k-ary node -- cuts the gate count severalfold.  Pure boolean
+    restructuring: the produced words are value-identical to the flat OR, so
+    binary plans stay bit-identical.
+    """
+
+    def __init__(self, streams, parents, pcards):
+        self.pcards = pcards
+        self.sizes = [math.prod(pcards[j:]) for j in range(len(pcards))] + [1]
+        self._digits = {}
+        self._sets = {}
+        self._streams = streams
+        self._parents = parents
+
+    def digit(self, j, d):
+        if (j, d) not in self._digits:
+            self._digits[(j, d)] = bitops.digit_indicator(
+                self._streams[self._parents[j]], d
+            )
+        return self._digits[(j, d)]
+
+    def rows(self, selected):
+        """``selected``: iterable of mixed-radix row indices -> mask word,
+        ``None`` (empty) or ``_ONES`` (the full parent space)."""
+        return self._gather(0, frozenset(selected))
+
+    def _gather(self, j, sel):
+        if not sel:
+            return None
+        if len(sel) == self.sizes[j]:
+            return _ONES
+        memo_key = (j, sel)
+        if memo_key in self._sets:
+            return self._sets[memo_key]
+        sub_size = self.sizes[j + 1]
+        acc = None
+        for d in range(self.pcards[j]):
+            sub = frozenset(r - d * sub_size for r in sel
+                            if d * sub_size <= r < (d + 1) * sub_size)
+            inner = self._gather(j + 1, sub)
+            if inner is None:
+                continue
+            term = self.digit(j, d) if inner is _ONES else self.digit(j, d) & inner
+            acc = term if acc is None else acc | term
+        self._sets[memo_key] = acc
+        return acc
+
+
+def _lt_chain(plane, thresh_masks, hi, shape):
     """Bit-sliced ``byte < threshold`` borrow chain over the needed planes.
 
+    ``plane(k)`` returns entropy bit-plane ``k`` (memoised by the caller, so
+    the k-1 chains of one categorical node share the node's 8 planes).
     thresh_masks[k] is the packed mask of threshold bit ``k`` per position
     (None = bit clear everywhere, ``_ONES`` = set everywhere); ``hi`` marks
     positions whose threshold is 256 (always fires).  Planes below the lowest
@@ -105,7 +204,7 @@ def _node_stream(base, kd1, thresh_masks, hi, shape):
     lt = None
     eq = None
     for k in range(7, lo - 1, -1):
-        r = rng.plane_word(base, kd1, k)
+        r = plane(k)
         t = thresh_masks[k]
         if t is None:
             eq = ~r if eq is None else eq & ~r
@@ -124,6 +223,21 @@ def _node_stream(base, kd1, thresh_masks, hi, shape):
     return lt
 
 
+def _level_masks(rows, level, gather, l):
+    """Per-plane gathered mask words + the t=256 short-circuit for one level."""
+    if gather is None:  # root: one static row
+        t = rows[0][level]
+        masks = [(_ONES if (t >> k) & 1 else None) for k in range(8)]
+        hi = _ONES if t >= 256 else None
+        return masks, hi
+    masks = [
+        gather.rows([r for r in range(l) if (rows[r][level] >> k) & 1])
+        for k in range(8)
+    ]
+    hi = gather.rows([r for r in range(l) if rows[r][level] >= 256])
+    return masks, hi
+
+
 def sweep_tile(
     plan: SweepPlan,
     kd0,
@@ -138,57 +252,71 @@ def sweep_tile(
 ):
     """Counts for one tile: frames ``[f0, f0+bf)`` x words ``[w0, w0+bw)``.
 
-    ev: (bf, >= n_ev) int32 evidence values for the tile's frames.
-    Returns ``(numer (bf, n_q) int32, denom (bf,) int32)`` -- popcounts of the
-    acceptance stream and of each query stream ANDed with it, over this tile's
-    words only (callers accumulate across word tiles).
+    ev: (bf, >= n_ev) int32 evidence values for the tile's frames (one integer
+    in ``[0, card)`` per evidence node).  Returns ``(numer (bf, n_value_slots)
+    int32, denom (bf,) int32)`` -- popcounts of the acceptance stream and of
+    each query value indicator ANDed with it, over this tile's words only
+    (callers accumulate across word tiles).  Slot order: queries in plan
+    order, values ``1 .. card-1`` within a query.
 
     The entropy counter for node ``n``, frame ``f``, word ``w`` is
     ``n * n_frames * w_words + f * w_words + w`` -- one base counter per
-    output word, planes salted from it -- so tiles of any shape draw identical
-    bits for identical global positions.
+    output word, planes salted from it, ONE byte per stream position no
+    matter the cardinality -- so tiles of any shape draw identical bits for
+    identical global positions, and binary plans consume exactly the
+    pre-categorical entropy layout.
     """
     fi = jax.lax.broadcasted_iota(jnp.uint32, (bf, bw), 0)
     wi = jax.lax.broadcasted_iota(jnp.uint32, (bf, bw), 1)
     pos = (jnp.asarray(f0, jnp.uint32) + fi) * jnp.uint32(w_words) \
         + jnp.asarray(w0, jnp.uint32) + wi
-    streams = []
-    for n, (parents, thresh) in enumerate(plan.nodes):
+    streams = []        # per node: tuple of value bit-plane words
+    node_buckets = []   # per node: tuple of value==v indicator words, v=1..k-1
+    for n, (parents, card, rows) in enumerate(plan.nodes):
         node_off = jnp.uint32((n * n_frames * w_words) & 0xFFFFFFFF)
         base = rng.plane_base(node_off + pos, kd0)
-        m = len(parents)
-        l = len(thresh)
-        if m == 0:
-            t = thresh[0]
-            masks = [(_ONES if (t >> k) & 1 else None) for k in range(8)]
-            hi = _ONES if t >= 256 else None
+        l = len(rows)
+        if not parents:
+            gather = None
         else:
-            # CPT-row indicator words: AND of parent literals, first parent =
-            # most significant row bit (the spec.py / Fig S8 ordering).
-            indicators = []
-            for row in range(l):
-                acc = None
-                for j, p in enumerate(parents):
-                    lit = streams[p] if (row >> (m - 1 - j)) & 1 else ~streams[p]
-                    acc = lit if acc is None else acc & lit
-                indicators.append(acc)
-            masks = [
-                _indicator_or(indicators, [r for r in range(l) if (thresh[r] >> k) & 1], l)
-                for k in range(8)
-            ]
-            hi = _indicator_or(indicators, [r for r in range(l) if thresh[r] >= 256], l)
-        streams.append(_node_stream(base, kd1, masks, hi, (bf, bw)))
+            # Threshold-bit masks are factored ORs of CPT-row indicators over
+            # the parents' digit indicators, first parent = most significant
+            # mixed-radix digit (the spec.py / Fig S8 ordering), memoised
+            # across the node's masks (see _RowSetGather).
+            pcards = tuple(plan.card(p) for p in parents)
+            gather = _RowSetGather(streams, parents, pcards)
+        plane_cache = {}
+
+        def plane(k, base=base):
+            if k not in plane_cache:
+                plane_cache[k] = rng.plane_word(base, kd1, k)
+            return plane_cache[k]
+
+        levels = []
+        for v in range(card - 1):
+            masks, hi = _level_masks(rows, v, gather, l)
+            levels.append(_lt_chain(plane, masks, hi, (bf, bw)))
+        bks = bitops.nested_buckets(levels)
+        streams.append(tuple(bitops.planes_from_buckets(bks)))
+        node_buckets.append(tuple(bks))
     accept = None
     for col, e in enumerate(plan.evidence):
-        ind = streams[e] ^ jnp.where(ev[:, col : col + 1] == 1, jnp.uint32(0), _FULL)
+        ind = None
+        for b, pl in enumerate(streams[e]):
+            bit = (ev[:, col : col + 1] >> b) & 1
+            term = pl ^ jnp.where(bit == 1, jnp.uint32(0), _FULL)
+            ind = term if ind is None else ind & term
         accept = ind if accept is None else accept & ind
     if accept is None:
         accept = jnp.broadcast_to(_FULL, (bf, bw))
     denom = jnp.sum(jax.lax.population_count(accept).astype(jnp.int32), axis=-1)
     numer = jnp.stack(
         [
-            jnp.sum(jax.lax.population_count(accept & streams[q]).astype(jnp.int32), axis=-1)
+            jnp.sum(
+                jax.lax.population_count(accept & bk).astype(jnp.int32), axis=-1
+            )
             for q in plan.queries
+            for bk in node_buckets[q]
         ],
         axis=-1,
     )

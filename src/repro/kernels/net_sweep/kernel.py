@@ -58,10 +58,11 @@ def net_sweep_pallas(
     block_w: int = 256,
     interpret: bool = True,
 ):
-    """kd (2,) u32, ev (B, n_ev_padded) i32 -> (numer (B, n_q) i32, denom (B,) i32)."""
+    """kd (2,) u32, ev (B, n_ev_padded) i32
+    -> (numer (B, n_value_slots) i32, denom (B,) i32)."""
     b, n_ev = ev.shape
     w_words = n_bits // 32
-    n_q = len(plan.queries)
+    n_s = plan.n_value_slots
     block_f = min(block_f, b)
     block_w = min(block_w, w_words)
     assert b % block_f == 0, (b, block_f)
@@ -83,9 +84,9 @@ def net_sweep_pallas(
             pl.BlockSpec((2,), lambda f, w: (0,)),
             pl.BlockSpec((block_f, n_ev), lambda f, w: (f, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_f, n_q + 1), lambda f, w: (w, f, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_wtiles, b, n_q + 1), jnp.int32),
+        out_specs=pl.BlockSpec((1, block_f, n_s + 1), lambda f, w: (w, f, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_wtiles, b, n_s + 1), jnp.int32),
         interpret=interpret,
     )(kd, ev)
     out = jnp.sum(partials, axis=0)
-    return out[:, :n_q], out[:, n_q]
+    return out[:, :n_s], out[:, n_s]

@@ -39,10 +39,14 @@ def net_sweep(
 ):
     """Run the fused sweep: per-frame independent joint samples, conditioned.
 
-    ev_frames: (B, n_ev) int32 evidence values, columns in ``plan.evidence``
-    order.  Returns ``(numer (B, n_q) int32, denom (B,) int32)``: the CORDIV
-    ratio numerator popcount per query and the accepted-bit count per frame
-    (``posterior ~ numer / denom``, noise ``~ sqrt(p (1-p) / denom)``).
+    ev_frames: (B, n_ev) int32 evidence values (one integer in ``[0, card)``
+    per evidence node), columns in ``plan.evidence`` order.  Returns
+    ``(numer (B, n_value_slots) int32, denom (B,) int32)``: one CORDIV ratio
+    numerator popcount per query *value* (queries in plan order, values
+    ``1 .. card-1`` within a query; the value-0 count is ``denom`` minus the
+    query's slots) and the accepted-bit count per frame
+    (``posterior ~ numer / denom``, noise ``~ sqrt(p (1-p) / denom)``).  For
+    an all-binary plan this is exactly the old one-column-per-query layout.
 
     Every frame draws an independent joint sample (the frame index is folded
     into the entropy counters), which is what the physical memristor array

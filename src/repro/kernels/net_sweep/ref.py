@@ -18,7 +18,8 @@ from repro.kernels.net_sweep.common import SweepPlan, sweep_tile
 def net_sweep_ref(
     kd: jnp.ndarray, ev: jnp.ndarray, plan: SweepPlan, n_bits: int
 ):
-    """kd (2,) u32 seed words, ev (B, n_ev) int32 -> (numer (B, n_q) i32, denom (B,) i32)."""
+    """kd (2,) u32 seed words, ev (B, n_ev) int32
+    -> (numer (B, n_value_slots) i32, denom (B,) i32)."""
     b = ev.shape[0]
     w = bitops.n_words(n_bits)
     return sweep_tile(plan, kd[0], kd[1], ev, 0, 0, b, w, w, b)

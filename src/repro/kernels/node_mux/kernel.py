@@ -1,6 +1,9 @@
 """Pallas TPU kernels: one Bayesian-network node from pre-drawn entropy.
 
-Two formulations (same conditional distribution, different entropy budgets):
+Three kernels: the two binary formulations (same conditional distribution,
+different entropy budgets) plus the categorical gather
+(``node_mux_cat_pallas``, value bit-planes from one byte vs the
+parent-gathered CDF -- body shared with the jnp ref via ``cat_gather_body``):
 
 * ``node_mux_pallas`` (row-encode): compare pre-drawn random bytes against the
   8-bit CPT thresholds (the SNE comparator, one per CPT row), pack 32 stream
@@ -26,6 +29,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core import bitops
+from repro.kernels.node_mux.ref import cat_gather_body
 
 
 def _node_mux_kernel(cpt_ref, rand_ref, par_ref, out_ref):
@@ -75,6 +81,60 @@ def _node_mux_gather_kernel(cpt_ref, rand_ref, par_ref, out_ref):
         bits = (lane < level[..., 0]).astype(jnp.uint32)
         acc = acc | jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
     out_ref[...] = acc
+
+
+def _node_mux_cat_kernel(cdf_ref, rand_ref, par_ref, out_ref, *, cards):
+    out_ref[...] = cat_gather_body(
+        cdf_ref[...], rand_ref[...], par_ref[...], cards
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cards", "block_r", "interpret"))
+def node_mux_cat_pallas(
+    cdf: jnp.ndarray,
+    rand_words: jnp.ndarray,
+    parents: jnp.ndarray,
+    *,
+    cards: tuple,
+    block_r: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """cdf (R, L, k-1) u32, rand_words (R, n_rand) u32, parents (P, R, W) u32
+    value bit-planes -> (vbits, R, W) u32 sampled value bit-planes.
+
+    Same tiling story as the binary gather kernel: grid over rows, one byte of
+    entropy per stream position, everything in VMEM.  The body is the shared
+    ``cat_gather_body``, so kernel and ref are bit-identical by construction.
+    """
+    r, n_rand = rand_words.shape
+    k = int(cards[0])
+    pcards = tuple(int(c) for c in cards[1:])
+    l = 1
+    p = 0
+    for c in pcards:
+        l *= c
+        p += bitops.value_bits(c)
+    vb = bitops.value_bits(k)
+    assert cdf.shape == (r, l, k - 1), (cdf.shape, (r, l, k - 1))
+    assert n_rand % 8 == 0
+    w = n_rand // 8
+    assert parents.shape == (p, r, w), (parents.shape, (p, r, w))
+    block_r = min(block_r, r)
+    assert r % block_r == 0, f"rows {r} not divisible by block {block_r}"
+    grid = (r // block_r,)
+    kernel = functools.partial(_node_mux_cat_kernel, cards=cards)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, l, k - 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_r, n_rand), lambda i: (i, 0)),
+            pl.BlockSpec((p, block_r, w), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((vb, block_r, w), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((vb, r, w), jnp.uint32),
+        interpret=interpret,
+    )(cdf, rand_words, parents)
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))

@@ -1,7 +1,9 @@
-"""jit'd public wrapper for the node-MUX sweep (the bayesnet compiler's inner op).
+"""jit'd public wrappers for the node-MUX sweep (the bayesnet compiler's inner op).
 
-``node_mux`` turns one Bayesian-network node into its packed stochastic stream.
-Two modes, identical in distribution:
+``node_mux`` turns one binary Bayesian-network node into its packed stochastic
+stream; ``node_mux_categorical`` generalises the gather mode to cardinality-k
+nodes (value bit-planes sampled from one byte against the parent-gathered DAC
+CDF).  The binary modes, identical in distribution:
 
 * ``mode='gather'`` (default, production): gather the node's 8-bit DAC
   threshold by the parents' packed bits, then compare one entropy byte per
@@ -22,10 +24,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import rng
+from repro.core import bitops, rng
 from repro.kernels import backend
-from repro.kernels.node_mux.kernel import node_mux_gather_pallas, node_mux_pallas
-from repro.kernels.node_mux.ref import node_mux_gather_ref, node_mux_ref
+from repro.kernels.node_mux.kernel import (
+    node_mux_cat_pallas,
+    node_mux_gather_pallas,
+    node_mux_pallas,
+)
+from repro.kernels.node_mux.ref import (
+    node_mux_cat_ref,
+    node_mux_gather_ref,
+    node_mux_ref,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("n_bits", "mode", "use_kernel", "interpret"))
@@ -85,3 +95,60 @@ def node_mux(
         else:
             out = node_mux_ref(flat_cpt, rand, flat_par)
     return out.reshape(lead + (w,))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cards", "n_bits", "use_kernel", "interpret")
+)
+def node_mux_categorical(
+    key: jax.Array,
+    cdf: jnp.ndarray,
+    parents: jnp.ndarray,
+    *,
+    cards: tuple,
+    n_bits: int = 128,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Lower one cardinality-``k`` network node to its packed value bit-planes.
+
+    cdf:     (..., L, k-1) uint32 non-increasing cumulative DAC thresholds per
+             mixed-radix CPT row (``rng.cdf_thresholds_int``; L = product of
+             parent cardinalities, first parent = most significant digit).
+    parents: (P, ..., n_words) packed parent value bit-planes; parent ``j``
+             owns the contiguous block of ``value_bits(k_j)`` planes, LSB
+             first (leading dims match cdf's).
+    cards:   static ``(k, k_p0, .., k_pm-1)`` -- node then parent cardinalities.
+    Returns ``(value_bits(k),) + lead + (n_words,)`` uint32.
+
+    The categorical generalisation of ``mode='gather'``: ONE counter-entropy
+    byte per stream position samples the whole k-way draw against the
+    parent-gathered CDF.  n_bits must be a multiple of 32.
+    """
+    assert n_bits % 32 == 0, "kernel path consumes whole uint32 entropy words"
+    interpret = backend.resolve_interpret(interpret)
+    use_kernel = backend.resolve_use_kernel(use_kernel, interpret)
+    k = int(cards[0])
+    pcards = tuple(int(c) for c in cards[1:])
+    l = 1
+    p = 0
+    for c in pcards:
+        l *= c
+        p += bitops.value_bits(c)
+    cdf = jnp.asarray(cdf, jnp.uint32)
+    assert cdf.shape[-2:] == (l, k - 1), (cdf.shape, (l, k - 1))
+    lead = cdf.shape[:-2]
+    w = n_bits // 32
+    assert parents.shape == (p,) + lead + (w,), (parents.shape, lead)
+    flat_cdf = cdf.reshape((-1, l, k - 1))
+    flat_par = parents.reshape(p, -1, w)
+    rows = flat_cdf.shape[0]
+    block = backend.pick_block(rows, 256)
+    rand = rng.counter_hash_words(key, (rows,), n_bits // 4)
+    if use_kernel:
+        out = node_mux_cat_pallas(
+            flat_cdf, rand, flat_par, cards=cards, block_r=block, interpret=interpret
+        )
+    else:
+        out = node_mux_cat_ref(flat_cdf, rand, flat_par, cards)
+    return out.reshape((out.shape[0],) + lead + (w,))

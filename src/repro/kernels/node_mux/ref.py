@@ -1,6 +1,7 @@
 """jnp references for the node-MUX sweep (the CPU production fallback).
 
-Two formulations of the same conditional Bernoulli:
+``cat_gather_body`` / ``node_mux_cat_ref`` carry the categorical (k-ary)
+gather; the two binary formulations of the same conditional Bernoulli:
 
 * ``node_mux_ref`` (row-encode): encode the ``2**m`` CPT rows as independent
   packed streams (byte-threshold comparators, same scheme as ``sne_encode``),
@@ -22,7 +23,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import logic, rng
+from repro.core import bitops, logic, rng
 
 
 def node_mux_ref(
@@ -57,6 +58,69 @@ def gather_thresholds(
         pbit = (parents[j][..., None] >> shifts) & jnp.uint32(1)   # (R, W, 8)
         level = jnp.where(pbit[..., None] == 1, level[..., 1::2], level[..., 0::2])
     return level[..., 0]
+
+
+def cat_gather_body(
+    cdf: jnp.ndarray, rand: jnp.ndarray, parents: jnp.ndarray, cards: tuple
+) -> jnp.ndarray:
+    """Categorical threshold-gather: the shared jnp body (ref AND Pallas kernel).
+
+    cdf     (R, L, k-1) u32 non-increasing cumulative DAC thresholds per
+            mixed-radix CPT row (first parent = most significant digit).
+    rand    (R, n_rand) u32 -- ONE entropy byte per stream position, exactly
+            the binary gather budget: the whole categorical draw rides on the
+            byte the first comparison already paid for.
+    parents (P, R, W) u32 packed value bit-planes; parent ``j`` owns the
+            contiguous plane block ``[sum_{i<j} vbits_i, ...)``, LSB first.
+    cards   static ``(k, k_p0, .., k_pm-1)``.
+
+    Returns (vbits, R, W) u32: the sampled value's packed bit-planes.  The
+    per-position CDF row is gathered by a mixed-radix select over the parents'
+    digits (the stream-wide MUX tree collapsed to ``k-1`` 8-bit scalars), the
+    byte is compared against every level, and the nested level indicators are
+    re-packed via ``bitops.value_planes``.
+    """
+    k = int(cards[0])
+    pcards = tuple(int(c) for c in cards[1:])
+    r, n_rand = rand.shape
+    w = n_rand // 8
+    vb = bitops.value_bits(k)
+    offsets = []
+    off = 0
+    for c in pcards:
+        offsets.append(off)
+        off += bitops.value_bits(c)
+    planes_acc = [jnp.zeros((r, w), jnp.uint32) for _ in range(vb)]
+    for byte in range(4):
+        lane = ((rand >> jnp.uint32(8 * byte)) & jnp.uint32(0xFF)).reshape(r, w, 8)
+        shifts = (jnp.arange(8, dtype=jnp.uint32) * 4 + byte).astype(jnp.uint32)
+        level = cdf[:, None, None, :, :]                  # (R, 1, 1, L, k-1)
+        for j in range(len(pcards) - 1, -1, -1):
+            kj = pcards[j]
+            dj = jnp.zeros((r, w, 8), jnp.uint32)
+            for b in range(bitops.value_bits(kj)):
+                pbit = (parents[offsets[j] + b][..., None] >> shifts) & jnp.uint32(1)
+                dj = dj | (pbit << jnp.uint32(b))
+            lv = level.reshape(level.shape[:-2] + (level.shape[-2] // kj, kj, k - 1))
+            acc = lv[..., 0, :]
+            for d in range(1, kj):
+                acc = jnp.where(dj[..., None, None] == jnp.uint32(d), lv[..., d, :], acc)
+            level = acc
+        level = level[..., 0, :]                          # (R, W, 8, k-1)
+        cnt = jnp.sum((lane[..., None] < level).astype(jnp.uint32), axis=-1)
+        for b in range(vb):
+            bits = (cnt >> jnp.uint32(b)) & jnp.uint32(1)
+            planes_acc[b] = planes_acc[b] | jnp.sum(
+                bits << shifts, axis=-1, dtype=jnp.uint32
+            )
+    return jnp.stack(planes_acc)
+
+
+def node_mux_cat_ref(
+    cdf: jnp.ndarray, rand: jnp.ndarray, parents: jnp.ndarray, cards: tuple
+) -> jnp.ndarray:
+    """jnp reference for the categorical gather (see :func:`cat_gather_body`)."""
+    return cat_gather_body(cdf, rand, parents, cards)
 
 
 def node_mux_gather_ref(

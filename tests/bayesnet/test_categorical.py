@@ -1,0 +1,341 @@
+"""Categorical (k-ary) domain correctness.
+
+Three pillars:
+
+* **k=2 regression**: binary networks must stay BIT-identical to the
+  pre-categorical compiler -- streams, fused counts, and posteriors are pinned
+  against goldens captured from the pre-refactor tree (commit 338b354).
+* **k-ary correctness**: randomized mixed-cardinality DAGs (k in 2..5, fan-in
+  <= 3) against the exact enumeration oracle, through both the fused sweep and
+  the unfused per-node program; plus bit-exactness of the categorical
+  node_mux kernel vs its jnp ref.
+* **mechanism**: CDF thresholds, value bit-planes, and the categorical root
+  encoder sample the documented quantised distribution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+
+from repro.bayesnet import by_name, compile_network, make_posterior_fn, sweep_plan
+from repro.bayesnet.compile import lower_streams
+from repro.bayesnet.spec import NetworkSpec, Node
+from repro.core import bitops, rng
+from repro.kernels.net_sweep import SweepPlan, net_sweep
+from repro.kernels.node_mux import node_mux_categorical
+
+N_BITS = 1 << 14
+
+
+# --- k=2 regression: bit-identical to the pre-categorical compiler -----------------
+
+# Goldens captured from the pre-refactor tree (commit 338b354): pedestrian-night,
+# evidence sampled with PRNGKey(42), run keys PRNGKey(0)/PRNGKey(7), n_bits=2048.
+_GOLD_EV = [[1, 0, 0], [0, 0, 1], [1, 0, 0], [1, 0, 0],
+            [0, 0, 0], [0, 0, 0], [1, 0, 0], [1, 0, 1]]
+_GOLD_FUSED_NUMER = [[40, 8], [22, 66], [44, 13], [52, 13],
+                     [14, 16], [9, 8], [56, 12], [72, 110]]
+_GOLD_FUSED_DENOM = [681, 95, 705, 744, 667, 676, 741, 153]
+# float32 posteriors as uint32 bit patterns (exact equality, no repr round-trip)
+_GOLD_FUSED_POST_BITS = [
+    [1030788702, 1010858059], [1047339784, 1060231750],
+    [1031774987, 1016532707], [1032790985, 1016013769],
+    [1017901615, 1019511423], [1012539731, 1010951356],
+    [1033553486, 1015327226], [1055977713, 1060638051],
+]
+_GOLD_UNFUSED_POST_BITS = [
+    [1032774204, 1002341114], [1048427529, 1060305204],
+    [1030133490, 1016972696], [1031350728, 1018581126],
+    [1018023432, 1017264067], [1022472319, 1016636766],
+    [1029382313, 1014446218], [1056847285, 1060190996],
+]
+_GOLD_UNFUSED_DENOM = [688, 113, 675, 674, 707, 644, 729, 143]
+# first words of three node streams from lower_streams(spec, PRNGKey(7), 256)
+_GOLD_STREAMS = {
+    "night": [2403081081, 563707892, 1695044603, 4068916680,
+              251601518, 1716507668, 3120645670, 1669460608],
+    "pedestrian": [1224744968, 16875520, 805308552, 4751488,
+                   262226, 268440881, 17306624, 2960],
+    "brake": [147923209, 277971204, 875563082, 557184,
+              1331280, 316679426, 1082666010, 1207962512],
+}
+
+
+def test_binary_net_bit_identical_fused_counts_and_posterior():
+    spec = by_name("pedestrian-night")
+    plan = sweep_plan(spec, spec.queries, spec.evidence)
+    ev = jnp.asarray(_GOLD_EV, jnp.int32)
+    numer, denom = net_sweep(jax.random.PRNGKey(0), ev, plan=plan,
+                             n_bits=2048, use_kernel=False)
+    assert np.asarray(numer).tolist() == _GOLD_FUSED_NUMER
+    assert np.asarray(denom).tolist() == _GOLD_FUSED_DENOM
+    post, acc = compile_network(spec, n_bits=2048).run(jax.random.PRNGKey(0), ev)
+    assert post.shape == (8, 2)                       # binary contract unchanged
+    np.testing.assert_array_equal(
+        np.asarray(post).view(np.uint32), np.asarray(_GOLD_FUSED_POST_BITS, np.uint32)
+    )
+
+
+def test_binary_net_bit_identical_unfused_streams_and_posterior():
+    spec = by_name("pedestrian-night")
+    streams = lower_streams(spec, jax.random.PRNGKey(7), 256)
+    for name, words in _GOLD_STREAMS.items():
+        assert len(streams[name]) == 1                # binary: one value plane
+        assert np.asarray(streams[name][0]).tolist() == words, name
+    ev = jnp.asarray(_GOLD_EV, jnp.int32)
+    post, acc = compile_network(spec, n_bits=2048, fused=False).run(
+        jax.random.PRNGKey(0), ev
+    )
+    assert np.asarray(acc).tolist() == _GOLD_UNFUSED_DENOM
+    np.testing.assert_array_equal(
+        np.asarray(post).view(np.uint32),
+        np.asarray(_GOLD_UNFUSED_POST_BITS, np.uint32),
+    )
+
+
+def test_legacy_sweep_plan_form_normalises():
+    """Pre-categorical (parents, scalar-thresholds) plans keep working."""
+    legacy = SweepPlan(
+        nodes=(((), (128,)), ((0,), (26, 230))),
+        evidence=(0,),
+        queries=(1,),
+    )
+    assert legacy.nodes == (((), 2, ((128,),)), ((0,), 2, ((26,), (230,))))
+    assert legacy.n_value_slots == 1
+    numer, denom = net_sweep(
+        jax.random.PRNGKey(0), jnp.ones((4, 1), jnp.int32), plan=legacy,
+        n_bits=1024, use_kernel=False,
+    )
+    assert numer.shape == (4, 1)
+
+
+# --- spec validation ----------------------------------------------------------------
+
+def test_node_categorical_constructor_and_value_probs():
+    n = Node.categorical("c", (), ((0.2, 0.3, 0.5),))
+    assert n.k == 3 and n.n_value_bits == 2 and not n.is_flat
+    b = Node("b", (), (0.7,))
+    assert b.value_probs() == ((1.0 - 0.7, 0.7),) and b.n_value_bits == 1
+
+
+def test_flat_cpt_rejects_nonbinary():
+    with pytest.raises(ValueError, match="binary-only"):
+        Node("x", (), (0.2, 0.3), k=3)
+
+
+def test_nested_row_must_sum_to_one():
+    with pytest.raises(ValueError, match="sums to"):
+        Node.categorical("x", (), ((0.5, 0.1, 0.1),))
+
+
+def test_nested_row_length_must_match_k():
+    with pytest.raises(ValueError, match="value probabilities"):
+        Node("x", (), ((0.5, 0.5),), k=3)
+
+
+def test_spec_validates_rows_against_parent_cardinalities():
+    tri = Node.categorical("t", (), ((0.2, 0.3, 0.5),))
+    with pytest.raises(ValueError, match="CPT rows"):
+        NetworkSpec(name="bad", nodes=(tri, Node("c", ("t",), (0.1, 0.9))))
+    ok = NetworkSpec(name="ok", nodes=(
+        tri, Node("c", ("t",), ((0.9, 0.1), (0.5, 0.5), (0.2, 0.8)), k=2),
+    ))
+    assert ok.card("t") == 3 and ok.cards() == (3, 2) and ok.max_card() == 3
+
+
+# --- CDF thresholds and value planes ------------------------------------------------
+
+def test_cdf_thresholds_binary_matches_scalar_grid():
+    for p in (0.0, 0.13, 0.5, 0.999, 1.0):
+        assert rng.cdf_thresholds_int((1.0 - p, p)) == (rng.threshold_int(p),)
+
+
+def test_cdf_thresholds_non_increasing_and_quantised():
+    cdf = rng.cdf_thresholds_int((0.1, 0.2, 0.3, 0.4))
+    assert cdf == (rng.threshold_int(0.9), rng.threshold_int(0.7), rng.threshold_int(0.4))
+    assert all(a >= b for a, b in zip(cdf, cdf[1:]))
+
+
+def test_encode_packed_categorical_distribution():
+    probs = (0.15, 0.35, 0.30, 0.20)
+    cdf = rng.cdf_thresholds_int(probs)
+    planes = rng.encode_packed_categorical(jax.random.PRNGKey(5), cdf, N_BITS)
+    assert planes.shape == (2, N_BITS // 32)
+    vals = np.zeros(N_BITS, np.int64)
+    for b in range(2):
+        vals |= np.asarray(bitops.unpack_bits(planes[b], N_BITS)).astype(np.int64) << b
+    bounds = (256,) + cdf + (0,)
+    for v, _ in enumerate(probs):
+        want = (bounds[v] - bounds[v + 1]) / 256.0
+        got = (vals == v).mean()
+        sigma = np.sqrt(want * (1 - want) / N_BITS)
+        assert abs(got - want) < 5 * sigma, (v, got, want)
+
+
+def test_value_plane_helpers_roundtrip():
+    # nested levels for values 0..4 (k=5): planes must binary-encode the count
+    rs = np.random.RandomState(0)
+    vals = rs.randint(0, 5, size=256)
+    levels = [
+        bitops.pack_bits(jnp.asarray((vals >= v).astype(np.uint32)))
+        for v in range(1, 5)
+    ]
+    planes = bitops.value_planes(levels)
+    assert len(planes) == bitops.value_bits(5) == 3
+    back = np.zeros(256, np.int64)
+    for b, pl in enumerate(planes):
+        back |= np.asarray(bitops.unpack_bits(pl, 256)).astype(np.int64) << b
+    np.testing.assert_array_equal(back, vals)
+    for d in range(5):
+        ind = bitops.digit_indicator(planes, d)
+        got = np.asarray(bitops.unpack_bits(ind & bitops.pad_mask(256), 256))
+        np.testing.assert_array_equal(got, (vals == d).astype(np.uint8))
+
+
+# --- categorical node_mux kernel ----------------------------------------------------
+
+def test_node_mux_categorical_kernel_bitexact():
+    cards = (4, 3, 2)                                  # k=4 node, parents k=3, k=2
+    rs = np.random.RandomState(1)
+    n_bits, rows, l = 1024, 8, 6
+    cdf = np.stack([
+        [rng.cdf_thresholds_int(tuple(r)) for r in rs.dirichlet(np.ones(4), size=l)]
+        for _ in range(rows)
+    ]).astype(np.uint32)
+    v3 = rs.randint(0, 3, size=(rows, n_bits))
+    v2 = rs.randint(0, 2, size=(rows, n_bits))
+    parents = jnp.stack([
+        bitops.pack_bits(jnp.asarray(v3 & 1, jnp.uint32)),
+        bitops.pack_bits(jnp.asarray((v3 >> 1) & 1, jnp.uint32)),
+        bitops.pack_bits(jnp.asarray(v2, jnp.uint32)),
+    ])
+    ref = node_mux_categorical(jax.random.PRNGKey(3), jnp.asarray(cdf), parents,
+                               cards=cards, n_bits=n_bits, use_kernel=False)
+    ker = node_mux_categorical(jax.random.PRNGKey(3), jnp.asarray(cdf), parents,
+                               cards=cards, n_bits=n_bits, use_kernel=True,
+                               interpret=True)
+    assert ref.shape == (2, rows, n_bits // 32)
+    assert bool(jnp.all(ref == ker))
+
+
+def test_node_mux_categorical_conditional_distribution():
+    """Conditional on the parents' digits, the sampled value follows the
+    gathered (DAC-quantised) CPT row."""
+    cards = (3, 2)
+    probs = ((0.6, 0.3, 0.1), (0.1, 0.2, 0.7))
+    cdf = jnp.asarray([[rng.cdf_thresholds_int(r) for r in probs]], jnp.uint32)
+    parent = rng.fair_bits(jax.random.PRNGKey(2), (1, 1), N_BITS)
+    planes = node_mux_categorical(jax.random.PRNGKey(9), cdf, parent,
+                                  cards=cards, n_bits=N_BITS, use_kernel=False)
+    vals = np.zeros(N_BITS, np.int64)
+    for b in range(planes.shape[0]):
+        vals |= np.asarray(bitops.unpack_bits(planes[b, 0], N_BITS)).astype(np.int64) << b
+    pbits = np.asarray(bitops.unpack_bits(parent[0, 0], N_BITS)).astype(np.int64)
+    for row in range(2):
+        sel = pbits == row
+        bounds = (256,) + rng.cdf_thresholds_int(probs[row]) + (0,)
+        for v in range(3):
+            want = (bounds[v] - bounds[v + 1]) / 256.0
+            got = (vals[sel] == v).mean()
+            sigma = np.sqrt(max(want * (1 - want), 1e-4) / sel.sum())
+            assert abs(got - want) < 5 * sigma, (row, v, got, want)
+
+
+# --- randomized k-ary DAGs vs the enumeration oracle --------------------------------
+
+def _random_kary_dag(seed: int) -> NetworkSpec:
+    """Random 4-7 node DAG, cardinalities 2-5, fan-in <= 3; CPT rows snapped to
+    the 8-bit DAC CDF grid so the float oracle and the quantised stochastic
+    path sample identical networks."""
+    rs = np.random.RandomState(seed)
+    n = int(rs.randint(4, 8))
+    nodes = []
+    cards = []
+    for i in range(n):
+        k = int(rs.randint(2, 6))
+        m = int(min(i, rs.randint(0, 4)))
+        pidx = sorted(rs.choice(i, size=m, replace=False)) if m else []
+        parents = tuple(f"n{j}" for j in pidx)
+        n_rows = int(np.prod([cards[j] for j in pidx])) if pidx else 1
+        rows = []
+        for _ in range(n_rows):
+            # raw thresholds on the DAC grid, then difference into probs
+            cuts = np.sort(rs.choice(np.arange(8, 249), size=k - 1, replace=False))[::-1]
+            bounds = np.concatenate([[256], cuts, [0]])
+            rows.append(tuple((bounds[:-1] - bounds[1:]) / 256.0))
+        nodes.append(Node(f"n{i}", parents, tuple(rows), k=k))
+        cards.append(k)
+    names = [nd.name for nd in nodes]
+    n_ev = int(rs.randint(1, 3))
+    ev = tuple(str(e) for e in rs.choice(names[1:], size=min(n_ev, n - 1), replace=False))
+    queries = tuple(nm for nm in names if nm not in ev)[:2]
+    return NetworkSpec(name=f"kary{seed}", nodes=tuple(nodes),
+                       evidence=ev, queries=queries)
+
+
+def _zmax(post, exact, accepted, floor=1e-3):
+    post, exact = np.asarray(post), np.asarray(exact)
+    acc = np.asarray(accepted).reshape((-1,) + (1,) * (post.ndim - 1))
+    sig = np.sqrt(np.clip(exact * (1 - exact), floor, None) / np.maximum(acc, 1))
+    keep = np.broadcast_to(acc > 50, post.shape)
+    return float(np.max(np.abs(post - exact)[keep] / sig[keep]))
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_fused_kary_dags_match_enumeration_oracle(seed):
+    spec = _random_kary_dag(seed)
+    oracle = make_posterior_fn(spec)      # CPTs already on the DAC grid
+    rs = np.random.RandomState(seed + 1)
+    frames = jnp.asarray(
+        np.stack([
+            np.zeros(len(spec.evidence), np.int32),
+            np.asarray([rs.randint(0, spec.card(e)) for e in spec.evidence], np.int32),
+        ])
+    )
+    exact, _ = oracle(frames)
+    net = compile_network(spec, n_bits=N_BITS, share_entropy=False, fused=True)
+    post, acc = net.run(jax.random.PRNGKey(seed), frames)
+    if not bool(np.any(np.asarray(acc) > 50)):
+        return                            # evidence too unlikely at this n_bits
+    assert _zmax(post, exact, acc) < 4.5, spec.name
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_unfused_kary_dags_match_enumeration_oracle(seed):
+    """Both entropy modes and both estimators agree with exact enumeration."""
+    spec = _random_kary_dag(seed)
+    oracle = make_posterior_fn(spec)
+    frames = jnp.zeros((2, len(spec.evidence)), jnp.int32)
+    exact, _ = oracle(frames)
+    for share, estimator in ((True, "ratio"), (False, "fill")):
+        net = compile_network(
+            spec, n_bits=N_BITS, share_entropy=share, estimator=estimator
+        )
+        assert not net.fused
+        post, acc = net.run(jax.random.PRNGKey(seed), frames)
+        if not bool(np.any(np.asarray(acc) > 50)):
+            continue
+        assert _zmax(post, exact, acc) < 4.5, (spec.name, share, estimator)
+
+
+def test_rows_mode_rejects_kary():
+    spec = by_name("obstacle-class")
+    with pytest.raises(ValueError, match="k-ary"):
+        compile_network(spec, n_bits=1024, mux_mode="rows")
+
+
+def test_decide_argmaxes_the_posterior():
+    spec = by_name("obstacle-class")
+    net = compile_network(spec, n_bits=1 << 13)
+    # unambiguous frames: strong vehicle evidence vs strong nothing
+    ev = np.asarray([[0, 2, 2, 2], [0, 0, 0, 0]])
+    dec, acc = net.decide(jax.random.PRNGKey(0), ev, decide_bits=1024)
+    dec = np.asarray(dec)
+    qi = net.queries.index("obstacle")
+    assert dec.shape == (2, 2)
+    assert dec[0, qi] == 2                # vehicle
+    assert dec[1, qi] == 0                # none

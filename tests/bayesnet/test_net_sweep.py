@@ -112,9 +112,26 @@ def test_net_sweep_kernel_bitexact_fan_in_three():
     np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
 
 
+@pytest.mark.parametrize("name", ["obstacle-class", "intersection-cat"])
+def test_net_sweep_kernel_bitexact_categorical(name):
+    """Tiled Pallas accumulation == jnp ref on k-ary plans (multi-slot numer)."""
+    spec = by_name(name)
+    plan = sweep_plan(spec, spec.queries, spec.evidence)
+    assert plan.n_value_slots > len(spec.queries)    # a real k-ary query set
+    ev = sample_evidence(spec, jax.random.PRNGKey(6), 16)
+    nk, dk = net_sweep(jax.random.PRNGKey(4), ev, plan=plan, n_bits=1024,
+                       use_kernel=True, interpret=True)
+    nr, dr = net_sweep(jax.random.PRNGKey(4), ev, plan=plan, n_bits=1024,
+                       use_kernel=False)
+    assert nk.shape == (16, plan.n_value_slots)
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+
 def _zmax(post, exact, accepted, floor=1e-3):
+    """Shape-agnostic: post is (B, n_q) for binary queries, (B, n_q, k) k-ary."""
     post, exact = np.asarray(post), np.asarray(exact)
-    acc = np.asarray(accepted)[:, None]
+    acc = np.asarray(accepted).reshape((-1,) + (1,) * (post.ndim - 1))
     sig = np.sqrt(np.clip(exact * (1 - exact), floor, None) / np.maximum(acc, 1))
     keep = np.broadcast_to(acc > 50, post.shape)
     return float(np.max(np.abs(post - exact)[keep] / sig[keep]))
@@ -124,7 +141,7 @@ def _zmax(post, exact, accepted, floor=1e-3):
 def test_fused_matches_unfused_every_scenario(name):
     """The fused sweep and the per-node program are two samplers of the same
     quantised network: both must sit within stochastic noise of the oracle,
-    frame by frame."""
+    frame by frame (binary AND categorical scenarios alike)."""
     spec = by_name(name)
     ev = sample_evidence(spec, jax.random.PRNGKey(11), 64)
     exact, _ = make_posterior_fn(spec, dac_quantize=True)(ev)
@@ -136,15 +153,15 @@ def test_fused_matches_unfused_every_scenario(name):
     assert _zmax(pf, exact, af) < 5.0, name
     assert _zmax(pu, exact, au) < 5.0, name
     # the two estimates differ only by their independent stochastic noise
+    pf, pu, exact = np.asarray(pf), np.asarray(pu), np.asarray(exact)
+    lead = (-1,) + (1,) * (pf.ndim - 1)
+    af_, au_ = np.asarray(af).reshape(lead), np.asarray(au).reshape(lead)
     sig = np.sqrt(
-        np.clip(np.asarray(exact) * (1 - np.asarray(exact)), 1e-3, None)
-        * (1 / np.maximum(np.asarray(af), 1)[:, None] + 1 / np.maximum(np.asarray(au), 1)[:, None])
+        np.clip(exact * (1 - exact), 1e-3, None)
+        * (1 / np.maximum(af_, 1) + 1 / np.maximum(au_, 1))
     )
-    keep = np.broadcast_to(
-        (np.asarray(af) > 50)[:, None] & (np.asarray(au) > 50)[:, None],
-        sig.shape,
-    )
-    z = np.abs(np.asarray(pf) - np.asarray(pu)) / sig
+    keep = np.broadcast_to((af_ > 50) & (au_ > 50), sig.shape)
+    z = np.abs(pf - pu) / sig
     assert float(np.max(z[keep])) < 5.0, name
 
 

@@ -1,8 +1,8 @@
-"""Spec validation: CPT shapes, DAG checks, topological order."""
+"""Spec validation: CPT shapes, DAG checks, topological order, cardinalities."""
 
 import pytest
 
-from repro.bayesnet.spec import NetworkSpec, Node, chain
+from repro.bayesnet.spec import NetworkSpec, Node, chain, value_bits
 
 
 def test_topo_order_respects_edges():
@@ -51,6 +51,33 @@ def test_duplicate_names_rejected():
 def test_unknown_evidence_rejected():
     with pytest.raises(ValueError, match="evidence/query"):
         NetworkSpec(name="t", nodes=(Node("a"),), evidence=("b",))
+
+
+def test_kary_cardinality_accessors():
+    spec = NetworkSpec(
+        name="k",
+        nodes=(
+            Node.categorical("w", (), ((0.5, 0.3, 0.2),)),
+            Node("rain", ("w",), ((0.9, 0.1), (0.4, 0.6), (0.2, 0.8)), k=2),
+        ),
+    )
+    assert spec.card("w") == 3 and spec.card("rain") == 2
+    assert spec.cards() == (3, 2) and spec.cards(("rain", "w")) == (2, 3)
+    assert spec.max_card() == 3
+    assert spec.cpt_rows("rain") == ((0.9, 0.1), (0.4, 0.6), (0.2, 0.8))
+    assert [value_bits(k) for k in (2, 3, 4, 5, 8, 9)] == [1, 2, 2, 3, 3, 4]
+
+
+def test_kary_node_needs_k_mismatched_parent_rows_rejected():
+    tri = Node.categorical("t", (), ((0.2, 0.3, 0.5),))
+    with pytest.raises(ValueError, match="CPT rows"):
+        # flat binary node declares 2 rows, but the k=3 parent needs 3
+        NetworkSpec(name="bad", nodes=(tri, Node("c", ("t",), (0.1, 0.9))))
+
+
+def test_mixed_flat_nested_cpt_rejected():
+    with pytest.raises(ValueError, match="mixed"):
+        Node("x", ("a",), ((0.5, 0.5), 0.3))
 
 
 def test_chain_builder():
