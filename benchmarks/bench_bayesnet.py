@@ -1,4 +1,5 @@
-"""Bayesnet compiler throughput: frames/sec vs network size and entropy mode.
+"""Bayesnet compiler throughput: frames/sec vs network size, entropy mode,
+decision epilogue, and frame sharding.
 
 Every scenario network is timed over a 1024-frame evidence batch in a single
 jit launch, in BOTH entropy modes:
@@ -13,6 +14,22 @@ ratio, so the cost of per-frame independence is tracked for every scenario in
 every future ``BENCH_*.json`` (the committed trajectory once showed a ~70x
 cliff here; the fused sweep holds it to low single digits, and CI's
 bench-smoke gate fails if the pedestrian-night ratio regresses past 8x).
+
+Two newer row families ride the same min-of-N timing:
+
+* ``_decide_`` rows time ``CompiledNetwork.decide`` -- the sweep with its
+  in-kernel decision epilogue -- against the posterior-only sweep; the
+  derived column records the overhead ratio (gated ``<= 1.3x`` by
+  ``check_bench``; the epilogue is a handful of argmaxes over counts that
+  never leave registers, so it should be noise-level).
+* ``_sharded_`` rows time the ``compile_network(devices=N)`` ``shard_map``
+  launch over every visible device (run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get 8 CPU
+  shards); the derived column records device count and the speedup vs the
+  single-device independent row from the same run.  Shards are bit-identical
+  to the single-device launch, so this row isolates pure execution scaling:
+  on a multi-core host it approaches the device count, while a 1-2 core
+  container shows mostly the smaller-working-set effect.
 """
 
 from __future__ import annotations
@@ -37,7 +54,11 @@ def run() -> None:
         spec = by_name(name)
         net = compile_network(spec, n_bits=N_BITS, share_entropy=True)
         ev = sample_evidence(spec, jax.random.PRNGKey(1), N_FRAMES)
-        us = common.timeit(lambda n=net, e=ev: n.run(key, e), iters=25, stat="min")
+        # shared launches run sub-millisecond, so min-of-25 samples only a
+        # ~25ms window -- too narrow to dodge a multi-second interference
+        # burst on a shared tenant.  100 iters widens the window 4x at
+        # trivial cost; the slower row families keep 25 (already 100ms+).
+        us = common.timeit(lambda n=net, e=ev: n.run(key, e), iters=100, stat="min")
         fps = N_FRAMES / (us / 1e6)
         shared_fps[name] = fps
         common.emit(
@@ -47,11 +68,16 @@ def run() -> None:
             f"n_bits {N_BITS}",
         )
 
-    # independent entropy: every frame draws its own joint sample (fused sweep)
+    # independent entropy: every frame draws its own joint sample (fused
+    # sweep).  The compiled nets and evidence batches are kept for the decide
+    # and sharded row families below -- recompiling the identical program
+    # three times would triple bench-smoke compile time for nothing.
+    indep_nets = {}
     for name in SCENARIO_NAMES:
         spec = by_name(name)
         net = compile_network(spec, n_bits=N_BITS, share_entropy=False)
         ev = sample_evidence(spec, jax.random.PRNGKey(1), N_FRAMES)
+        indep_nets[name] = (net, ev)
         us = common.timeit(lambda n=net, e=ev: n.run(key, e), iters=25, stat="min")
         fps = N_FRAMES / (us / 1e6)
         common.emit(
@@ -59,6 +85,60 @@ def run() -> None:
             us,
             f"{fps:,.0f} frames/s | fresh entropy per frame | "
             f"shared/indep ratio {shared_fps[name] / fps:.2f}x",
+        )
+
+    # fused decide: sweep + in-kernel argmax epilogue, one launch.  Timed
+    # interleaved with the posterior-only sweep so the overhead ratio
+    # compares same-moment measurements (shared-tenant interference drifts
+    # ~2x on minute timescales, which would otherwise swamp a few-percent
+    # epilogue).
+    for name in SCENARIO_NAMES:
+        net, ev = indep_nets[name]
+        us_sweep, us = common.timeit_pair(
+            lambda n=net, e=ev: n.run(key, e),
+            lambda n=net, e=ev: n.decide(key, e),
+            iters=25, stat="min",
+        )
+        fps = N_FRAMES / (us / 1e6)
+        common.emit(
+            f"bayesnet_{name}_decide_batch{N_FRAMES}",
+            us,
+            f"{fps:,.0f} frames/s | posterior+decision one launch | "
+            f"decide/sweep overhead {us / us_sweep:.2f}x",
+            extra={"decide_overhead": round(us / us_sweep, 4)},
+        )
+
+    # sharded sweep: one shard_map launch over every visible device,
+    # interleaved against the single-device program for the same reason
+    n_dev = len(jax.devices())
+    if n_dev < 2 or N_FRAMES % n_dev:
+        # a non-dividing device count would silently fall back to the
+        # single-device launch inside compile_network -- emitting that as a
+        # "sharded" row would poison the perf trajectory with a mislabel
+        print(
+            f"# bayesnet sharded rows skipped: {n_dev} device(s), batch "
+            f"{N_FRAMES} (need >=2 devices dividing the batch; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+        return
+    for name in SCENARIO_NAMES:
+        spec = by_name(name)
+        single, ev = indep_nets[name]
+        net = compile_network(spec, n_bits=N_BITS, devices=n_dev)
+        us_single, us = common.timeit_pair(
+            lambda n=single, e=ev: n.run(key, e),
+            lambda n=net, e=ev: n.run(key, e),
+            iters=25, stat="min",
+        )
+        fps = N_FRAMES / (us / 1e6)
+        common.emit(
+            f"bayesnet_{name}_indep_sharded_batch{N_FRAMES}",
+            us,
+            f"{fps:,.0f} frames/s | {n_dev} devices x {N_FRAMES // n_dev} "
+            f"frames, bit-identical to single-device | "
+            f"{us_single / us:.2f}x vs single-device same-moment",
+            extra={"devices": n_dev,
+                   "sharded_speedup": round(us_single / us, 4)},
         )
 
 

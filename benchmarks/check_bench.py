@@ -1,6 +1,6 @@
 """Bench-smoke regression gates over a freshly written ``BENCH_*.json``.
 
-Two gates:
+Three gates:
 
 * **Independent-entropy cliff**: per-frame joint samples (the production
   mode, what the physical memristor array provides for free) must stay within
@@ -14,7 +14,13 @@ Two gates:
   The baseline is auto-discovered next to the fresh snapshot (the snapshot
   itself is excluded), so CI compares each run against the repo's own perf
   history; rows that exist only on one side (new scenarios, retired ones) are
-  skipped.
+  skipped.  The sharded and decide rows are plain ``bayesnet_*`` rows, so
+  they ride this gate with the same min-of-N >30% rule automatically.
+* **Decide epilogue overhead**: for every scenario with both a
+  ``_decide_`` and an ``_indep_`` row, the fused posterior+decision launch
+  must stay within ``MAX_DECIDE_OVERHEAD`` of the posterior-only sweep.  The
+  epilogue argmaxes counts that never leave registers; if it costs real time
+  something regressed structurally (e.g. the decide path stopped fusing).
 
 Usage: ``python benchmarks/check_bench.py BENCH_<ts>.json [baseline.json]``
 (CI runs it right after the bench-smoke step writes the snapshot), or call
@@ -26,6 +32,7 @@ from __future__ import annotations
 import glob
 import json
 import os
+import re
 import subprocess
 import sys
 
@@ -33,6 +40,10 @@ MAX_INDEP_RATIO = 8.0
 # Fail when a scenario's frames/s drops more than 30% vs the committed
 # snapshot: new_us > old_us / 0.7.
 MAX_FPS_REGRESSION = 0.30
+# The in-kernel decide epilogue is a register-level argmax; 1.3x absorbs
+# shared-tenant noise while still catching a structurally broken fusion
+# (the acceptance target for a quiet machine is within 10%).
+MAX_DECIDE_OVERHEAD = 1.30
 _SHARED = "bayesnet_pedestrian-night_batch1024"
 _INDEP = "bayesnet_pedestrian-night_indep_batch1024"
 
@@ -123,9 +134,55 @@ def check_regression(data: dict, path: str, baseline: str | None) -> None:
         )
 
 
+_OVERHEAD_RE = re.compile(r"overhead ([0-9.]+)x")
+
+
+def check_decide_overhead(data: dict, path: str) -> None:
+    """Gate the same-moment decide/sweep ratio each ``_decide_`` row records.
+
+    The bench times the pair interleaved (``common.timeit_pair``) precisely
+    so the ratio is immune to interference drift between row families --
+    dividing the decide row's ``us_per_call`` by the independent row's,
+    measured minutes apart, would gate scheduler luck instead.  The ratio is
+    read from the row's structured ``decide_overhead`` field, with a parse of
+    the derived string as fallback for snapshots from before the field.
+    """
+    rows = sorted(
+        k for k in data if "_decide_" in k and k.startswith("bayesnet_")
+    )
+    if not rows:
+        print("decide gate: no decide rows, skipping")
+        return
+    failed = []
+    for row in rows:
+        # structured field first (bench emits it since PR 5); regex over the
+        # derived string only as a fallback for older committed snapshots
+        ratio = data[row].get("decide_overhead")
+        if ratio is None:
+            m = _OVERHEAD_RE.search(str(data[row].get("derived", "")))
+            if not m:
+                print(f"decide gate: {row} has no recorded overhead ratio, skipping")
+                continue
+            ratio = m.group(1)
+        ratio = float(ratio)
+        status = "FAIL" if ratio > MAX_DECIDE_OVERHEAD else "ok"
+        print(
+            f"decide gate [{status}]: {row}: {ratio:.2f}x the "
+            f"posterior-only sweep (limit {MAX_DECIDE_OVERHEAD:.2f}x)"
+        )
+        if ratio > MAX_DECIDE_OVERHEAD:
+            failed.append(row)
+    if failed:
+        raise SystemExit(
+            f"fused decide overhead exceeds {MAX_DECIDE_OVERHEAD:.2f}x the "
+            f"posterior-only sweep for {failed} in {path}"
+        )
+
+
 def check(path: str, baseline: str | None = None) -> None:
     data = _load(path)
     check_indep_ratio(data, path)
+    check_decide_overhead(data, path)
     check_regression(data, path, baseline)
 
 

@@ -23,8 +23,9 @@ def timeit(
     observed call -- the standard noise-robust estimator when the benchmark
     shares its cores with other tenants (an interfered call can run 10-20x
     slow, which poisons a small-sample median but never the min).  The
-    regression-gated bayesnet rows use it so CI compares machine capability,
-    not scheduler luck.
+    regression-gated bayesnet rows AND the seed-speedup latency rows
+    (``bench_latency``) use it so CI compares machine capability, not
+    scheduler luck.
     """
     for _ in range(warmup):
         out = fn(*args)
@@ -39,8 +40,40 @@ def timeit(
     return (times[0] if stat == "min" else times[len(times) // 2]) * 1e6
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    ROWS.append((name, us_per_call, derived))
+def timeit_pair(
+    fn_a: Callable, fn_b: Callable, warmup: int = 1, iters: int = 5,
+    stat: str = "median",
+) -> tuple:
+    """Time two callables with interleaved iterations; returns (us_a, us_b).
+
+    Ratio rows (decide vs sweep, sharded vs single-device) divide the two
+    numbers, and on a shared-tenant box the interference level can drift 2x
+    within a minute -- timing the pair back-to-back per iteration means both
+    sides see the same interference and the *ratio* stays honest even when
+    the absolute numbers wobble.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    ta.sort()
+    tb.sort()
+    pick = (lambda t: t[0]) if stat == "min" else (lambda t: t[len(t) // 2])
+    return pick(ta) * 1e6, pick(tb) * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str, extra: dict | None = None):
+    """Record one bench row.  ``extra`` merges additional *numeric* fields
+    into the row's JSON record (e.g. ``decide_overhead``) so gates can read
+    them structurally instead of parsing the human-readable derived string."""
+    ROWS.append((name, us_per_call, derived, extra or {}))
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
@@ -59,10 +92,12 @@ def write_json(out_dir: str = ".") -> str:
             "timestamp": stamp,
             "backend": jax.default_backend(),
             "jax_version": jax.__version__,
+            "device_count": jax.device_count(),
+            "cpu_count": os.cpu_count(),
         }
     }
-    for name, us, derived in ROWS:
-        payload[name] = {"us_per_call": us, "derived": derived}
+    for name, us, derived, extra in ROWS:
+        payload[name] = {"us_per_call": us, "derived": derived, **extra}
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     return path

@@ -90,8 +90,9 @@ print("   (thermal alone at night is already decisive -- the Fig 4 rescue, "
 # A cardinality-k node is one spec line -- no towers of booleans.  The
 # compiler lowers it to ceil(log2 k) packed value bit-planes sampled from one
 # entropy byte against the CPT row's 8-bit DAC CDF; queries come back as
-# normalised length-k posterior vectors and `decide` argmaxes them through
-# the fused bayes_decide op.
+# normalised length-k posterior vectors, and `decide` argmaxes the count
+# slots in-register inside the same fused sweep launch (posterior + MAP
+# decision, one kernel).
 spec = by_name("obstacle-class")
 net = compile_network(spec, n_bits=4096)
 ev = sample_evidence(spec, jax.random.PRNGKey(3), 2048)
@@ -111,8 +112,7 @@ print(f"5. {spec.name}: obstacle is ONE cardinality-4 node "
       f"mean |err| vs oracle {err.mean():.4f}")
 # a thermal large-warm signature + strong echo on a dark road: classify
 frame = np.array([1, 0, 2, 2])                   # night, rgb=none, th=large, radar=strong
-post, _ = net.run(jax.random.PRNGKey(5), np.stack([frame]))
-dec, _ = net.decide(jax.random.PRNGKey(5), np.stack([frame]))
+post, dec, _ = net.decide(jax.random.PRNGKey(5), np.stack([frame]))
 vec = ", ".join(f"{c}={float(p):.3f}" for c, p in zip(classes, np.asarray(post)[0, 0]))
 print(f"   P(obstacle | night, thermal-large, radar-strong) = [{vec}] "
       f"-> decide: {classes[int(np.asarray(dec)[0, 0])].upper()}")

@@ -1,0 +1,80 @@
+"""Scale-out demo: one launch, many devices, zero reproducibility tax.
+
+Run with forced host devices to see frame sharding on a CPU box:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/sharded_sweep.py
+
+The compiled network's fused sweep is embarrassingly parallel over frames and
+its entropy is a pure function of the global (node, frame, word) counter, so
+``compile_network(devices=8)`` shards the frame axis with ``shard_map`` and
+every shard reproduces exactly the bits the single-device launch would have
+produced for its slice -- verified below, then raced.  The FrameDriver's
+async mode then pipelines launches: dispatch never waits for device work,
+``harvest()`` is the only synchronisation point.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.bayesnet import (
+    FrameDriver, by_name, compile_network, sample_evidence,
+)
+
+n_dev = len(jax.devices())
+print(f"devices: {n_dev} ({jax.default_backend()})")
+
+spec = by_name("obstacle-class")
+ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(1), 2048))
+key = jax.random.PRNGKey(0)
+
+# 1. bit-identity: the sharded launch IS the single-device launch -------------
+single = compile_network(spec, n_bits=4096)
+sharded = compile_network(spec, n_bits=4096, devices=n_dev)
+p1, a1 = single.run(key, ev)
+pn, an = sharded.run(key, ev)
+np.testing.assert_array_equal(np.asarray(p1), np.asarray(pn))
+np.testing.assert_array_equal(np.asarray(a1), np.asarray(an))
+print(f"1. sharded ({sharded.n_shards} shards) == single-device: "
+      f"bit-identical posteriors over {ev.shape[0]} frames")
+
+
+def bench(net, reps=5):
+    jax.block_until_ready(net.run(key, ev))
+    best = min(
+        (lambda t0: (jax.block_until_ready(net.run(key, ev)),
+                     time.perf_counter() - t0)[1])(time.perf_counter())
+        for _ in range(reps)
+    )
+    return ev.shape[0] / best
+
+
+f1, fn = bench(single), bench(sharded)
+print(f"2. throughput: single {f1:,.0f} frames/s, sharded {fn:,.0f} frames/s "
+      f"({fn / f1:.2f}x on this host -- approaches {n_dev}x with real cores)")
+
+# 3. the whole sense->classify->act path in the same launch -------------------
+post, dec, acc = sharded.decide(key, ev[:4])
+classes = ("none", "pedestrian", "vehicle", "cyclist")
+qi = sharded.queries.index("obstacle")
+print("3. fused decide (posterior + argmax, one launch):")
+for i in range(4):
+    print(f"   frame {i}: P = {np.round(np.asarray(post)[i, qi], 3)} "
+          f"-> {classes[int(np.asarray(dec)[i, qi])]}")
+
+# 4. async driver: pipeline the queue, block once -----------------------------
+warm = FrameDriver(sharded, max_batch=512, salt=0)
+warm.submit(ev[:512])
+warm.drain()                       # compile the 512-lane bucket once, untimed
+drv = FrameDriver(sharded, max_batch=512, salt=0)
+drv.submit(ev)
+t0 = time.perf_counter()
+out = drv.drain_async()            # dispatches 4 launches, one harvest
+dt = time.perf_counter() - t0
+print(f"4. FrameDriver.drain_async: {len(out)} frames through "
+      f"{ev.shape[0] // 512} pipelined launches in {dt * 1e3:.1f} ms "
+      f"({len(out) / dt:,.0f} frames/s)")

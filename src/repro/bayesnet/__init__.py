@@ -3,19 +3,24 @@ stochastic domain (DESIGN.md SS8-SS10).
 
     spec.py       NetworkSpec / Node -- the source language; nodes carry a
                   cardinality k (binary = the k=2 special case)
-    compile.py    lowering: fused net_sweep (production) or per-node
-                  rng/node_mux/cordiv packed programs (verification baseline);
-                  k-ary nodes ride value bit-planes + 8-bit DAC CDFs
+    compile.py    lowering: fused net_sweep (production; devices= shards the
+                  frame axis bit-identically, decide rides an in-kernel
+                  argmax epilogue) or per-node rng/node_mux/cordiv packed
+                  programs (verification baseline); k-ary nodes ride value
+                  bit-planes + 8-bit DAC CDFs
     analytic.py   exact mixed-radix enumeration oracle + ancestral sampling
     scenarios.py  5-12 node driving networks over data/detection statistics
                   (binary quartet + categorical trio)
-    driver.py     serve-style continuous batching of evidence frames
+    driver.py     serve-style continuous batching of evidence frames, with
+                  non-blocking dispatch (step(block=False) / drain_async)
+                  and power-of-two launch buckets for short tails
 """
 
 from repro.bayesnet.analytic import make_posterior_fn, sample_evidence  # noqa: F401
 from repro.bayesnet.compile import (  # noqa: F401
     CompiledNetwork,
     compile_network,
+    posterior_argmax,
     sweep_plan,
 )
 from repro.bayesnet.driver import FrameDriver  # noqa: F401

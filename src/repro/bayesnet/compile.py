@@ -38,21 +38,33 @@ Posterior contract: when every query node is binary, ``run`` returns the
 classic ``(B, n_q)`` array of ``P(q=1 | evidence)`` -- bit-identical to the
 pre-categorical compiler.  When any query has ``k > 2``, ``run`` returns a
 ``(B, n_q, max_k)`` tensor of normalised per-value posteriors (rows of
-queries with smaller cardinality are zero-padded).  ``decide`` reduces either
-form to per-query argmax values through the fused ``bayes_decide`` op.
+queries with smaller cardinality are zero-padded).  ``decide`` returns the
+posterior AND its per-query MAP decisions from the same launch: the fused
+path argmaxes the count slots in-register (``net_sweep``'s decision
+epilogue), the unfused path argmaxes the assembled posterior -- identical
+results by construction.
+
+``compile_network(devices=N)`` (or an ambient ``mesh_context``) shards the
+fused launch over the frame axis with ``shard_map``; the global frame index
+is folded into the per-frame entropy counters, so sharded output is
+bit-identical to single-device output on every scenario.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.bayesnet.spec import NetworkSpec
 from repro.core import bitops, cordiv, rng
-from repro.kernels.bayes_decide import bayes_decide
+from repro.distributed import context as dist_context
+from repro.distributed import sharding as dist_sharding
 from repro.kernels.net_sweep import SweepPlan, net_sweep
 from repro.kernels.node_mux.ops import node_mux, node_mux_categorical
 
@@ -70,6 +82,9 @@ def _slot_assembler(q_cards: Tuple[int, ...]) -> Callable:
     array IS the posterior, bit-identical to the pre-categorical path);
     otherwise the slots fold into ``(B, n_q, max_k)`` with
     ``P(q = 0) = 1 - sum`` and zero padding past each query's cardinality.
+    Used by the ``fill`` estimator, whose slots are independent stochastic
+    divisions with no underlying integer counts; the ratio paths assemble
+    from counts instead (:func:`_count_assembler`).
     """
     if all(c == 2 for c in q_cards):
         return lambda slots: slots
@@ -97,6 +112,67 @@ def _slot_assembler(q_cards: Tuple[int, ...]) -> Callable:
     return assemble
 
 
+def _count_assembler(q_cards: Tuple[int, ...]) -> Callable:
+    """Counts -> posterior map for the ratio paths (count-exact value 0).
+
+    Same layout as :func:`_slot_assembler` -- all-binary query sets keep the
+    classic ``(B, n_q)`` slot array bit-identically -- but every k-ary column
+    is the correctly-rounded float32 of ``count / denom``, with the value-0
+    count reconstructed in the *integer* domain (``denom - sum(slots)``), the
+    SAME convention :func:`~repro.kernels.net_sweep.decide_counts` applies
+    before its argmax (the two must stay in lockstep or the fused decisions
+    and posterior diverge).  ``1 - sum(float slots)`` can land one ULP below
+    a tied slot probability, which would flip the posterior argmax away from
+    the count argmax on exact count ties; dividing the integer counts instead
+    makes equal counts equal floats, so the decide epilogue's tie-break
+    (lowest value) and the posterior argmax agree on every input by
+    construction.  A ``denom == 0`` frame yields the all-zero vector (the
+    :func:`ratio_from_counts` convention the binary path already follows).
+    """
+    if all(c == 2 for c in q_cards):
+        return lambda numer, denom: _posterior_from_counts(numer, denom)
+    kmax = max(q_cards)
+
+    def assemble(numer: jnp.ndarray, denom: jnp.ndarray) -> jnp.ndarray:
+        cols = []
+        off = 0
+        for c in q_cards:
+            v = numer[:, off : off + c - 1]
+            off += c - 1
+            c0 = denom[:, None] - jnp.sum(v, axis=-1, keepdims=True)
+            counts = jnp.concatenate([c0, v], axis=-1)
+            p = cordiv.ratio_from_counts(counts, denom[:, None])
+            if kmax > c:
+                p = jnp.concatenate(
+                    [p, jnp.zeros((p.shape[0], kmax - c), p.dtype)], axis=-1
+                )
+            cols.append(p)
+        return jnp.stack(cols, axis=1)
+
+    return assemble
+
+
+def posterior_argmax(post: jnp.ndarray) -> jnp.ndarray:
+    """MAP decision from a ``run`` posterior, matching the fused epilogue.
+
+    Binary layout ``(B, n_q)``: value 1 wins iff ``P(q=1) > 0.5`` (exactly
+    ``argmax([1-p, p])`` with ties to value 0).  k-ary layout
+    ``(B, n_q, kmax)``: argmax over the value axis (ties to the lowest value,
+    zero padding past a query's cardinality can never win).  This is the same
+    tie-break :func:`~repro.kernels.net_sweep.decide_counts` applies to the
+    raw counts, and the ratio-estimator posteriors (fused and unfused) are
+    assembled count-exactly (:func:`_count_assembler`: equal counts -> equal
+    floats), so applying this to a fused ``run`` posterior reproduces the
+    in-kernel decisions bit-for-bit.  Only the ``fill`` estimator's
+    posterior, which has no integer counts underneath, can land float ties
+    off the count grid.
+    """
+    post = jnp.asarray(post)
+    if post.ndim == 2:
+        return (post > 0.5).astype(jnp.int32)
+    return jnp.argmax(post, axis=-1).astype(jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class CompiledNetwork:
     """A network lowered to one jitted packed-stochastic program.
@@ -108,6 +184,11 @@ class CompiledNetwork:
     ``accepted[b]`` is the number of stream positions that satisfied frame
     ``b``'s evidence -- the effective sample count, so callers can bound the
     noise as ``sigma ~ sqrt(p (1-p) / accepted)``.
+
+    ``n_shards > 1`` marks the sharded fused program: one ``shard_map``
+    launch spans ``n_shards`` devices over the frame axis (``shard_axes``),
+    bit-identical to the single-device program for any batch the shard count
+    divides (indivisible batches transparently run the single-device path).
     """
 
     spec: NetworkSpec
@@ -119,32 +200,35 @@ class CompiledNetwork:
     fused: bool
     query_cards: Tuple[int, ...]
     _run: Callable = dataclasses.field(repr=False)
+    _decide: Callable = dataclasses.field(repr=False)
+    n_shards: int = 1
+    shard_axes: Tuple[str, ...] = ()
 
-    def run(self, key: jax.Array, ev_frames) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def _check_frames(self, ev_frames) -> jnp.ndarray:
         ev = jnp.asarray(ev_frames, jnp.int32)
         if ev.ndim != 2 or ev.shape[1] != len(self.evidence):
             raise ValueError(
                 f"evidence frames must be (B, {len(self.evidence)}), got {ev.shape}"
             )
-        return self._run(key, ev)
+        return ev
+
+    def run(self, key: jax.Array, ev_frames) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self._run(key, self._check_frames(ev_frames))
 
     def decide(
-        self, key: jax.Array, ev_frames, decide_bits: int = 256
-    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Per-frame argmax value for every query via the fused decision op.
+        self, key: jax.Array, ev_frames
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Posteriors AND per-query MAP decisions in the same launch.
 
-        Runs the compiled program, re-encodes each query's posterior vector as
-        packed streams, and lets :func:`~repro.kernels.bayes_decide` take the
-        popcount argmax -- the stochastic decision layer the paper's output
-        stage implements.  Returns ``(decisions (B, n_q) int32, accepted)``.
+        Fused programs run ``net_sweep(..., decide=True)``: the decision
+        epilogue argmaxes the per-query count slots in-register, so the whole
+        sense->classify->act path is one launch -- no posterior re-encode, no
+        second kernel.  Unfused programs argmax the assembled posterior
+        (:func:`posterior_argmax`); both produce the decision a MAP readout
+        of ``run``'s posterior would, bit-for-bit.  Returns
+        ``(post, decisions (B, n_q) int32, accepted)``.
         """
-        post, accepted = self.run(key, ev_frames)
-        if post.ndim == 2:  # all-binary queries: (B, n_q) -> per-value vectors
-            post = jnp.stack([1.0 - post, post], axis=-1)
-        dec, _ = bayes_decide(
-            jax.random.fold_in(key, 0x5EED), post[None], n_bits=decide_bits
-        )
-        return dec, accepted
+        return self._decide(key, self._check_frames(ev_frames))
 
 
 def sweep_plan(
@@ -242,6 +326,32 @@ def lower_streams(
     return streams
 
 
+def _resolve_frame_mesh(devices) -> Tuple[Mesh | None, Tuple[str, ...]]:
+    """Mesh + frame-sharding axes for ``compile_network(devices=...)``.
+
+    ``devices=N`` builds the 1-D ``frames`` mesh over the first N local
+    devices; ``devices=None`` picks up the ambient
+    :func:`~repro.distributed.context.current_mesh` (sharding over its
+    :func:`~repro.distributed.sharding.batch_axes`) so launcher code that
+    already runs under ``mesh_context`` shards for free.  Returns
+    ``(None, ())`` when there is nothing to shard over (one device, no mesh,
+    or no batch axis present in the mesh).
+    """
+    if devices is not None:
+        if int(devices) == 1:
+            return None, ()
+        return dist_context.frame_mesh(int(devices)), ("frames",)
+    mesh = dist_context.current_mesh()
+    if mesh is None:
+        return None, ()
+    axes = tuple(
+        a for a in dist_sharding.batch_axes(mesh) if a in mesh.axis_names
+    )
+    if not axes or math.prod(mesh.shape[a] for a in axes) <= 1:
+        return None, ()
+    return mesh, axes
+
+
 def compile_network(
     spec: NetworkSpec,
     n_bits: int = 4096,
@@ -252,6 +362,7 @@ def compile_network(
     estimator: str = "ratio",
     fused: bool | None = None,
     mux_mode: str = "gather",
+    devices: int | None = None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ) -> CompiledNetwork:
@@ -261,6 +372,16 @@ def compile_network(
     applies (independent entropy + ratio estimator -- the production mode),
     the per-node unfused path otherwise.  ``fused=False`` forces the unfused
     program, the statistical verification baseline for the fused kernel.
+
+    ``devices=N`` (fused only) wraps the sweep in one ``shard_map`` launch
+    over the frame axis of an N-device mesh; with no ``devices`` argument an
+    ambient :func:`~repro.distributed.context.mesh_context` mesh is picked up
+    automatically.  Each shard folds its *global* frame origin into the
+    entropy counters, so the sharded program is bit-identical to the
+    single-device one -- replicating independent samplers is exactly how the
+    physical array scales, and costs nothing in reproducibility.  Batches the
+    shard count does not divide transparently fall back to the single-device
+    launch (the jit is specialised per batch shape anyway).
     """
     queries = tuple(queries if queries is not None else spec.queries)
     evidence = tuple(evidence if evidence is not None else spec.evidence)
@@ -291,23 +412,70 @@ def compile_network(
             f"and mux_mode='gather' (got share_entropy={share_entropy}, "
             f"estimator={estimator!r}, mux_mode={mux_mode!r})"
         )
+    if devices is not None and int(devices) > 1 and not fused:
+        raise ValueError(
+            "devices= sharding requires the fused lowering: per-node unfused "
+            "programs draw batch-shaped entropy that is not bit-reproducible "
+            "across shard boundaries"
+        )
     mask = bitops.pad_mask(n_bits)
 
     if fused:
         plan = sweep_plan(spec, queries, evidence)
+        assemble_counts = _count_assembler(q_cards)
+        mesh, shard_axes = _resolve_frame_mesh(devices)
+        n_shards = (
+            math.prod(mesh.shape[a] for a in shard_axes) if mesh is not None else 1
+        )
+        sweep_kwargs = dict(
+            plan=plan, n_bits=n_bits, use_kernel=use_kernel, interpret=interpret
+        )
+
+        def launch(key, ev_frames, decide: bool):
+            """One sweep launch: sharded over the frame axis when it divides.
+
+            The per-shard body folds the shard's global frame origin into
+            ``net_sweep``'s entropy counters (``frame0`` / ``total_frames``),
+            which makes the sharded launch bit-identical to the single-device
+            one -- asserted for every scenario in the sharding tests.
+            """
+            b = ev_frames.shape[0]
+            if mesh is None or n_shards <= 1 or b % n_shards:
+                return net_sweep(key, ev_frames, decide=decide, **sweep_kwargs)
+            per_shard = b // n_shards
+            ax = shard_axes if len(shard_axes) > 1 else shard_axes[0]
+            bspec = P(ax)
+
+            def body(kd, ev_local):
+                idx = jnp.uint32(0)
+                for a in shard_axes:
+                    idx = idx * jnp.uint32(mesh.shape[a]) \
+                        + jax.lax.axis_index(a).astype(jnp.uint32)
+                return net_sweep(
+                    kd, ev_local, frame0=idx * jnp.uint32(per_shard),
+                    total_frames=b, decide=decide, **sweep_kwargs,
+                )
+
+            return shard_map(
+                body, mesh=mesh, in_specs=(P(), bspec),
+                out_specs=(bspec,) * (3 if decide else 2), check_rep=False,
+            )(rng.seed_words(key), ev_frames)
 
         @jax.jit
         def _run(key, ev_frames):
-            numer, denom = net_sweep(
-                key, ev_frames, plan=plan, n_bits=n_bits,
-                use_kernel=use_kernel, interpret=interpret,
-            )
-            return assemble(_posterior_from_counts(numer, denom)), denom
+            numer, denom = launch(key, ev_frames, False)
+            return assemble_counts(numer, denom), denom
+
+        @jax.jit
+        def _decide(key, ev_frames):
+            numer, denom, dec = launch(key, ev_frames, True)
+            return assemble_counts(numer, denom), dec, denom
 
         return CompiledNetwork(
             spec=spec, queries=queries, evidence=evidence, n_bits=n_bits,
             share_entropy=share_entropy, estimator=estimator, fused=True,
-            query_cards=q_cards, _run=_run,
+            query_cards=q_cards, _run=_run, _decide=_decide,
+            n_shards=n_shards, shard_axes=shard_axes if mesh is not None else (),
         )
 
     def slot_indicators(streams):
@@ -338,10 +506,12 @@ def compile_network(
     def ratio_batched(ev_frames, ev_planes, slot_streams):
         """Straight-line batched conditioning for the ratio estimator.
 
-        Computes ``cordiv_ratio`` -- popcount(numer) / popcount(denom) over
-        the same acceptance stream ``one_frame`` builds -- with indicators
-        broadcast across the frame axis instead of per-frame ``vmap``
-        closures.  Plane arrays are (W,) shared or (B, W) independent.
+        Computes the popcounts of the acceptance stream ``one_frame`` builds
+        and of each slot indicator ANDed with it, with indicators broadcast
+        across the frame axis instead of per-frame ``vmap`` closures.  Plane
+        arrays are (W,) shared or (B, W) independent.  Returns raw counts
+        ``(numer (B, n_s), denom (B,))`` so the caller can assemble the
+        posterior count-exactly.
         """
         b = ev_frames.shape[0]
         accept = jnp.broadcast_to(mask, (b, mask.shape[0]))
@@ -359,7 +529,9 @@ def compile_network(
             ],
             axis=-1,
         )
-        return _posterior_from_counts(numer, denom), denom
+        return numer, denom
+
+    assemble_counts = _count_assembler(q_cards)
 
     @jax.jit
     def _run(key, ev_frames):
@@ -371,8 +543,11 @@ def compile_network(
         ev_planes = tuple(streams[e] for e in evidence)
         slots = slot_indicators(streams)
         if estimator == "ratio":
-            post, denom = ratio_batched(ev_frames, ev_planes, slots)
-            return assemble(post), denom
+            # count-exact assembly, like the fused path: equal counts give
+            # equal floats, so posterior_argmax ties break on the lowest
+            # value here too (the fill path has no counts to assemble from)
+            numer, denom = ratio_batched(ev_frames, ev_planes, slots)
+            return assemble_counts(numer, denom), denom
         if share_entropy:
             post, denom = jax.vmap(one_frame, in_axes=(0, None, None))(
                 ev_frames, ev_planes, slots
@@ -382,8 +557,13 @@ def compile_network(
             post, denom = jax.vmap(one_frame)(ev_frames, ev_planes, slots)
         return assemble(post), denom
 
+    @jax.jit
+    def _decide(key, ev_frames):
+        post, denom = _run(key, ev_frames)
+        return post, posterior_argmax(post), denom
+
     return CompiledNetwork(
         spec=spec, queries=queries, evidence=evidence, n_bits=n_bits,
         share_entropy=share_entropy, estimator=estimator, fused=False,
-        query_cards=q_cards, _run=_run,
+        query_cards=q_cards, _run=_run, _decide=_decide,
     )

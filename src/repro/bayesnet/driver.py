@@ -2,18 +2,31 @@
 
 Mirrors the LM serving engine's admission discipline on the bayesnet side:
 frames are submitted at any time into a pending queue, and every ``step``
-packs up to ``max_batch`` of them -- padding the tail with the last real frame
-so the jit launch keeps one static shape -- runs the compiled program once,
-and returns per-request posteriors.  One compile, one launch shape, arbitrary
-arrival pattern: the continuous-batching contract.
+packs up to ``max_batch`` of them, runs the compiled program once, and
+returns per-request posteriors.  Launch shapes are drawn from a small ladder
+of power-of-two *buckets* (1, 2, 4, ... max_batch): a short batch pads up to
+the nearest bucket by repeating its last real frame instead of always paying
+the full ``max_batch`` lanes, so a 1-frame step on a 1024-lane driver costs
+one frame's entropy, not ~1024x.  Padded lanes are dropped at harvest; each
+bucket compiles once and is reused for every launch of that shape.
 
 With the fused independent-entropy default (``compile_network``'s production
 mode) every frame in a launch carries its own joint sample, so batch-mates
-never share errors -- the padding frames simply burn a little extra entropy.
-The driver also sequences launch keys itself: pass ``key=None`` to ``step`` /
-``drain`` and each launch folds a monotonically increasing launch counter into
-the driver's base key, so successive launches draw disjoint entropy without
-the caller threading PRNG state.
+never share errors.  The driver also sequences launch keys itself: pass
+``key=None`` to ``step`` / ``drain`` and each launch folds a monotonically
+increasing launch counter into the driver's base key, so successive launches
+draw disjoint entropy without the caller threading PRNG state.
+
+**Async mode.**  ``step(block=False)`` dispatches the launch and returns
+immediately with its ticket: jax's async dispatch runs the device work while
+the driver packs and dispatches the next batch, and nothing calls
+``block_until_ready`` until ``harvest()`` converts the posteriors to host
+arrays.  ``drain_async`` pipelines the whole queue this way -- every launch
+in flight back-to-back, one synchronisation at the end.  The launch-counter
+key sequencing makes this safe: tickets are assigned at dispatch in
+submission order, so async results map to rids exactly as sync results do,
+and a sync and an async driver with the same ``(base_key, salt)`` return
+bit-identical posteriors.
 
 Every driver additionally folds a ``salt`` into its base key.  ``salt=None``
 (the default) takes the next value of a process-wide driver counter, so two
@@ -29,7 +42,7 @@ from __future__ import annotations
 
 import itertools
 from collections import deque
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -48,6 +61,8 @@ class FrameDriver:
         base_key: jax.Array | None = None,
         salt: int | None = None,
     ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.net = net
         self.max_batch = int(max_batch)
         self._queue: deque = deque()
@@ -56,6 +71,11 @@ class FrameDriver:
         base = base_key if base_key is not None else jax.random.PRNGKey(0)
         self._base_key = jax.random.fold_in(base, self.salt)
         self._launches = 0
+        self._dispatches = 0
+        # dispatched-but-unharvested launches, in dispatch order:
+        # (ticket, taken rids, device posteriors, device accepted counts)
+        self._inflight: deque = deque()
+        self.last_launch_shape: Optional[Tuple[int, int]] = None
 
     # ------------------------------------------------------------- admission
     def submit(self, frames) -> List[int]:
@@ -76,39 +96,93 @@ class FrameDriver:
     def pending(self) -> int:
         return len(self._queue)
 
+    @property
+    def in_flight(self) -> int:
+        """Dispatched launches whose results have not been harvested yet."""
+        return len(self._inflight)
+
     # ----------------------------------------------------------------- serve
     def _next_key(self) -> jax.Array:
         key = jax.random.fold_in(self._base_key, self._launches)
         self._launches += 1
         return key
 
-    def step(self, key: jax.Array | None = None) -> Dict[int, Tuple[np.ndarray, int]]:
-        """Run one batched launch over up to ``max_batch`` queued frames.
+    def _bucket(self, n_real: int) -> int:
+        """Smallest power-of-two launch shape >= n_real (capped at max_batch).
 
-        Returns {rid: (posteriors (n_q,), accepted bit count)}.  The launch
-        shape is always (max_batch, n_ev): short batches are padded by
-        repeating the final frame, and the padded rows' results are dropped.
-        ``key=None`` uses the driver's own launch-counter key sequence.
+        Padding to a bucket instead of to ``max_batch`` is the tail fix: the
+        padded lanes still replicate the last real frame (one static shape
+        per bucket), but a nearly-empty step skips the entropy planes of
+        every lane above its bucket because those lanes are simply not in
+        the launch.
         """
-        if not self._queue:
-            return {}
+        b = 1
+        while b < n_real:
+            b <<= 1
+        return min(b, self.max_batch)
+
+    def _dispatch(self, key: jax.Array | None) -> int:
+        """Pack one batch, launch it (async), park the device results."""
         if key is None:
             key = self._next_key()
-        taken = [self._queue.popleft() for _ in range(min(self.max_batch, len(self._queue)))]
+        taken = [
+            self._queue.popleft()
+            for _ in range(min(self.max_batch, len(self._queue)))
+        ]
         ev = np.stack([row for _, row in taken])
         n_real = ev.shape[0]
-        if n_real < self.max_batch:
-            pad = np.repeat(ev[-1:], self.max_batch - n_real, axis=0)
+        bucket = self._bucket(n_real)
+        if n_real < bucket:
+            pad = np.repeat(ev[-1:], bucket - n_real, axis=0)
             ev = np.concatenate([ev, pad], axis=0)
+        self.last_launch_shape = ev.shape
         post, accepted = self.net.run(key, ev)
-        post, accepted = np.asarray(post), np.asarray(accepted)
-        return {
-            rid: (post[i], int(accepted[i]))
-            for i, (rid, _) in enumerate(taken)
-        }
+        ticket = self._dispatches
+        self._dispatches += 1
+        self._inflight.append((ticket, [rid for rid, _ in taken], post, accepted))
+        return ticket
+
+    def harvest(self) -> Dict[int, Tuple[np.ndarray, int]]:
+        """Block on every in-flight launch and return {rid: (post, accepted)}.
+
+        The single synchronisation point of the async mode: device arrays are
+        converted to host arrays here (masking the padded lanes out -- only
+        real rids appear), in dispatch order, so result mapping follows
+        submission order exactly as in the sync path.
+        """
+        out: Dict[int, Tuple[np.ndarray, int]] = {}
+        while self._inflight:
+            _, rids, post, accepted = self._inflight.popleft()
+            post, accepted = np.asarray(post), np.asarray(accepted)
+            for i, rid in enumerate(rids):
+                out[rid] = (post[i], int(accepted[i]))
+        return out
+
+    def step(
+        self, key: jax.Array | None = None, block: bool = True
+    ) -> Dict[int, Tuple[np.ndarray, int]]:
+        """Run one batched launch over up to ``max_batch`` queued frames.
+
+        ``block=True`` (default) harvests immediately and returns
+        {rid: (posteriors (n_q,), accepted bit count)} for this launch (plus
+        any still-unharvested async launches).  ``block=False`` only
+        *dispatches* -- the jit launch's device work proceeds asynchronously
+        while the caller packs more frames -- and returns ``{}``; collect
+        results later with :meth:`harvest`.  ``key=None`` uses the driver's
+        own launch-counter key sequence.
+        """
+        if not self._queue:
+            return self.harvest() if block else {}
+        self._dispatch(key)
+        return self.harvest() if block else {}
 
     def drain(self, key: jax.Array | None = None) -> Dict[int, Tuple[np.ndarray, int]]:
-        """Step until the queue is empty; returns all results keyed by rid."""
+        """Step until the queue is empty; returns all results keyed by rid.
+
+        Any launches previously dispatched with ``step(block=False)`` are
+        harvested too, so ``drain`` is always the "collect everything"
+        call -- even when the queue itself is already empty.
+        """
         out: Dict[int, Tuple[np.ndarray, int]] = {}
         while self._queue:
             if key is None:
@@ -116,4 +190,24 @@ class FrameDriver:
             else:
                 key, sub = jax.random.split(key)
             out.update(self.step(sub))
+        out.update(self.harvest())
         return out
+
+    def drain_async(
+        self, key: jax.Array | None = None
+    ) -> Dict[int, Tuple[np.ndarray, int]]:
+        """Pipeline the whole queue: dispatch every launch, then one harvest.
+
+        Each launch is dispatched while its predecessors' device work is
+        still in flight; ``block_until_ready`` happens once, inside the
+        final :meth:`harvest`.  Key sequencing and rid mapping are identical
+        to :meth:`drain`, so the posteriors are bit-identical to the sync
+        path for the same ``(base_key, salt)``.
+        """
+        while self._queue:
+            if key is None:
+                sub = None
+            else:
+                key, sub = jax.random.split(key)
+            self.step(sub, block=False)
+        return self.harvest()

@@ -12,6 +12,7 @@ import contextvars
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
@@ -30,6 +31,21 @@ def mesh_context(mesh: Mesh):
         yield mesh
     finally:
         _MESH.reset(token)
+
+
+def frame_mesh(devices: int | None = None) -> Mesh:
+    """1-D mesh over the first ``devices`` local devices, axis ``"frames"``.
+
+    The frame axis is the embarrassingly-parallel batch dimension of the
+    bayesnet sweep (``compile_network(devices=...)`` shards over it); on a CPU
+    host ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` provides the
+    devices.  ``devices=None`` takes every local device.
+    """
+    devs = jax.devices()
+    n = len(devs) if devices is None else int(devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"devices={devices} outside [1, {len(devs)}]")
+    return Mesh(np.array(devs[:n]), ("frames",))
 
 
 def batch_axes() -> Tuple[str, ...]:

@@ -75,7 +75,14 @@ def axis_name(mesh: Mesh, role: str):
 
 
 def batch_axes(mesh: Mesh):
-    """Mesh axes the global batch is sharded over."""
+    """Mesh axes the global batch is sharded over.
+
+    A mesh carrying a ``"frames"`` axis (``context.frame_mesh``, the bayesnet
+    sweep's frame-parallel fabric) batches over exactly that axis; the LM
+    meshes batch over ``(pod,) data`` as before.
+    """
+    if "frames" in mesh.axis_names:
+        return ("frames",)
     if POLICY["fsdp2d"]:
         return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

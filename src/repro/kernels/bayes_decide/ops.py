@@ -5,6 +5,15 @@
 primitives (counter-based encode -> AND -> popcount -> argmax).  It draws the
 *identical* entropy words, so it is bit-exact against the fused op -- the
 benchmark harness uses the pair to report the fusion speedup honestly.
+
+This op is the *multi-modal fusion* decision layer (eq (3)): M independent
+modal posteriors re-enter the stochastic domain and their AND-fused streams
+are popcount-argmaxed.  A compiled network's own ``decide`` no longer routes
+through here -- the fused sweep argmaxes its count slots in-register
+(:func:`~repro.kernels.net_sweep.decide_counts`), which needs no re-encode
+because the counts never left the kernel.  Use this op when fusing posteriors
+that arrive from *separate* sources (modalities, networks, sensors), i.e.
+when there are no shared counts to argmax.
 """
 
 from __future__ import annotations

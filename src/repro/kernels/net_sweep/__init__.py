@@ -1,3 +1,3 @@
-from repro.kernels.net_sweep.common import SweepPlan  # noqa: F401
+from repro.kernels.net_sweep.common import SweepPlan, decide_counts  # noqa: F401
 from repro.kernels.net_sweep.ops import net_sweep  # noqa: F401
 from repro.kernels.net_sweep.ref import net_sweep_ref  # noqa: F401

@@ -129,6 +129,21 @@ class SweepPlan:
         """Numerator count columns: ``sum(card - 1)`` over the query nodes."""
         return sum(self.nodes[q][1] - 1 for q in self.queries)
 
+    @property
+    def query_cards(self) -> Tuple[int, ...]:
+        """Cardinality per query node, in query order."""
+        return tuple(self.nodes[q][1] for q in self.queries)
+
+    @property
+    def slot_offsets(self) -> Tuple[int, ...]:
+        """First numerator slot column of each query (queries own contiguous
+        runs of ``card - 1`` slots, in plan order)."""
+        offs, off = [], 0
+        for q in self.queries:
+            offs.append(off)
+            off += self.nodes[q][1] - 1
+        return tuple(offs)
+
 
 class _RowSetGather:
     """Trace-time-factored OR of CPT-row indicators for one node.
@@ -238,6 +253,29 @@ def _level_masks(rows, level, gather, l):
     return masks, hi
 
 
+def decide_counts(plan: SweepPlan, numer: jnp.ndarray, denom: jnp.ndarray):
+    """Decision epilogue: per-query argmax value from the count slots.
+
+    ``numer`` holds the per-query-value acceptance popcounts (values
+    ``1 .. card-1`` per query); the value-0 count is ``denom`` minus the
+    query's slots.  The argmax over the full count vector IS the argmax of
+    the per-value posterior (same positive denominator, same tie-break:
+    lowest value wins), so the fused decision is bit-identical to
+    posterior-argmax by construction.  A frame that accepted no stream
+    positions (``denom == 0``) decides value 0, matching the all-zero
+    posterior convention of :func:`~repro.core.cordiv.ratio_from_counts`.
+
+    numer (..., n_value_slots) i32, denom (...,) i32 -> (..., n_q) i32.
+    """
+    decs = []
+    for q_card, off in zip(plan.query_cards, plan.slot_offsets):
+        slots = numer[..., off : off + q_card - 1]
+        c0 = denom - jnp.sum(slots, axis=-1)
+        counts = jnp.concatenate([c0[..., None], slots], axis=-1)
+        decs.append(jnp.argmax(counts, axis=-1).astype(jnp.int32))
+    return jnp.stack(decs, axis=-1)
+
+
 def sweep_tile(
     plan: SweepPlan,
     kd0,
@@ -249,6 +287,7 @@ def sweep_tile(
     bw: int,
     w_words: int,
     n_frames: int,
+    decide: bool = False,
 ):
     """Counts for one tile: frames ``[f0, f0+bf)`` x words ``[w0, w0+bw)``.
 
@@ -264,8 +303,21 @@ def sweep_tile(
     output word, planes salted from it, ONE byte per stream position no
     matter the cardinality -- so tiles of any shape draw identical bits for
     identical global positions, and binary plans consume exactly the
-    pre-categorical entropy layout.
+    pre-categorical entropy layout.  ``f0`` may be a traced uint32 scalar:
+    a shard of a larger launch passes its *global* frame origin (and the
+    global ``n_frames``), which is all it takes for sharded output to be
+    bit-identical to the single-device sweep.
+
+    ``decide=True`` appends the :func:`decide_counts` epilogue -- per-query
+    argmax straight off the in-register popcounts -- and returns
+    ``(numer, denom, decisions (bf, n_q) i32)``.  Only valid when the tile
+    spans the full word axis (partial-word counts cannot be argmaxed).
     """
+    if decide and bw != w_words:
+        raise ValueError(
+            f"decide epilogue needs the full word axis in one tile "
+            f"(bw={bw}, w_words={w_words}); argmax over partial counts is wrong"
+        )
     fi = jax.lax.broadcasted_iota(jnp.uint32, (bf, bw), 0)
     wi = jax.lax.broadcasted_iota(jnp.uint32, (bf, bw), 1)
     pos = (jnp.asarray(f0, jnp.uint32) + fi) * jnp.uint32(w_words) \
@@ -320,4 +372,6 @@ def sweep_tile(
         ],
         axis=-1,
     )
+    if decide:
+        return numer, denom, decide_counts(plan, numer, denom)
     return numer, denom

@@ -9,6 +9,16 @@ block (no cross-program read-modify-write, so the grid is race-free on
 backends that run programs in parallel); the tiny ``(w_tiles, B, n_q + 1)``
 partials are summed outside the kernel.
 
+Sharded launches pass a global frame origin (``ctx[2]``) and the global frame
+count: the entropy counters depend only on global ``(node, frame, word)``
+positions, so a kernel tiling a shard produces bit-identical words to one
+tiling the whole batch.  With ``decide=True`` and a single word tile (the
+standard CPU/TPU block shapes cover 4096-bit streams in one tile) each program
+also argmaxes its complete per-query count vectors in-register and writes the
+decisions as extra output columns; multi-word-tile grids fall back to the same
+``decide_counts`` epilogue over the summed partials, still inside the launch's
+jit scope.
+
 VMEM working set is ``O(n_nodes * block_f * block_w)`` words (the live node
 streams) -- comfortably inside budget for every scenario network at the
 standard 128 x 256 blocks.
@@ -22,31 +32,44 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.net_sweep.common import SweepPlan, sweep_tile
+from repro.kernels.net_sweep.common import SweepPlan, decide_counts, sweep_tile
 
 
 def _net_sweep_kernel(
-    kd_ref, ev_ref, out_ref, *, plan, w_words, n_frames, block_f, block_w
+    ctx_ref, ev_ref, out_ref, *, plan, w_words, n_frames, block_f, block_w,
+    decide,
 ):
     f = pl.program_id(0)
     w = pl.program_id(1)
-    numer, denom = sweep_tile(
+    out = sweep_tile(
         plan,
-        kd_ref[0],
-        kd_ref[1],
+        ctx_ref[0],
+        ctx_ref[1],
         ev_ref[...],
-        f * block_f,
+        ctx_ref[2] + jnp.asarray(f * block_f, jnp.uint32),
         w * block_w,
         block_f,
         block_w,
         w_words,
         n_frames,
+        decide=decide,
     )
-    out_ref[...] = jnp.concatenate([numer, denom[:, None]], axis=-1)[None]
+    if decide:
+        numer, denom, dec = out
+        out_ref[...] = jnp.concatenate(
+            [numer, denom[:, None], dec], axis=-1
+        )[None]
+    else:
+        numer, denom = out
+        out_ref[...] = jnp.concatenate([numer, denom[:, None]], axis=-1)[None]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("plan", "n_bits", "block_f", "block_w", "interpret")
+    jax.jit,
+    static_argnames=(
+        "plan", "n_bits", "total_frames", "decide", "block_f", "block_w",
+        "interpret",
+    ),
 )
 def net_sweep_pallas(
     kd: jnp.ndarray,
@@ -54,39 +77,61 @@ def net_sweep_pallas(
     *,
     plan: SweepPlan,
     n_bits: int,
+    frame0=0,
+    total_frames: int | None = None,
+    decide: bool = False,
     block_f: int = 128,
     block_w: int = 256,
     interpret: bool = True,
 ):
     """kd (2,) u32, ev (B, n_ev_padded) i32
-    -> (numer (B, n_value_slots) i32, denom (B,) i32)."""
+    -> (numer (B, n_value_slots) i32, denom (B,) i32[, decisions (B, n_q) i32]).
+
+    ``frame0`` (int or traced u32 scalar) and ``total_frames`` (static) place
+    the launch inside a larger logical batch for sharded execution.
+    """
     b, n_ev = ev.shape
     w_words = n_bits // 32
     n_s = plan.n_value_slots
+    n_q = len(plan.queries)
+    total = b if total_frames is None else total_frames
     block_f = min(block_f, b)
     block_w = min(block_w, w_words)
     assert b % block_f == 0, (b, block_f)
     assert w_words % block_w == 0, (w_words, block_w)
     n_wtiles = w_words // block_w
     grid = (b // block_f, n_wtiles)
+    # in-kernel decide needs every word of a frame in one program
+    decide_in_kernel = decide and n_wtiles == 1
+    n_cols = n_s + 1 + (n_q if decide_in_kernel else 0)
+    ctx = jnp.concatenate(
+        [kd.astype(jnp.uint32),
+         jnp.asarray(frame0, jnp.uint32).reshape(1)]
+    )
     kernel = functools.partial(
         _net_sweep_kernel,
         plan=plan,
         w_words=w_words,
-        n_frames=b,
+        n_frames=total,
         block_f=block_f,
         block_w=block_w,
+        decide=decide_in_kernel,
     )
     partials = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((2,), lambda f, w: (0,)),
+            pl.BlockSpec((3,), lambda f, w: (0,)),
             pl.BlockSpec((block_f, n_ev), lambda f, w: (f, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_f, n_s + 1), lambda f, w: (w, f, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_wtiles, b, n_s + 1), jnp.int32),
+        out_specs=pl.BlockSpec((1, block_f, n_cols), lambda f, w: (w, f, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_wtiles, b, n_cols), jnp.int32),
         interpret=interpret,
-    )(kd, ev)
-    out = jnp.sum(partials, axis=0)
-    return out[:, :n_s], out[:, n_s]
+    )(ctx, ev)
+    out = jnp.sum(partials, axis=0) if n_wtiles > 1 else partials[0]
+    numer, denom = out[:, :n_s], out[:, n_s]
+    if not decide:
+        return numer, denom
+    if decide_in_kernel:
+        return numer, denom, out[:, n_s + 1 :]
+    return numer, denom, decide_counts(plan, numer, denom)

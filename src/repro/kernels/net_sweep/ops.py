@@ -8,6 +8,19 @@ so the ``share_entropy=False`` production mode stops writing
 ``B x nodes x 2**m x n_rand`` words to HBM per launch: nothing but the
 evidence frames goes in and nothing but the per-frame counts comes out.
 
+Two optional extensions make the launch span further:
+
+* ``frame0`` / ``total_frames`` place the call inside a larger logical batch.
+  The entropy counter is a pure function of the global (node, frame, word)
+  index, so a shard that passes its global frame origin and the global frame
+  count produces bit-identical words to the single-device sweep over its
+  slice -- this is what ``compile_network(devices=...)`` wraps in
+  ``shard_map``.
+* ``decide=True`` appends the decision epilogue: per-query count vectors
+  argmaxed in-register (``common.decide_counts``), returning
+  ``(numer, denom, decisions)`` so the sense->classify->act path is one
+  launch with no posterior re-encode.
+
 Dispatch follows the other kernel ops: Pallas kernel where it compiles,
 bit-exact jnp reference (the same ``sweep_tile`` body over the whole array) as
 the CPU production fallback.
@@ -27,13 +40,21 @@ from repro.kernels.net_sweep.kernel import net_sweep_pallas
 from repro.kernels.net_sweep.ref import net_sweep_ref
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "n_bits", "use_kernel", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "plan", "n_bits", "total_frames", "decide", "use_kernel", "interpret",
+    ),
+)
 def net_sweep(
     key: jax.Array,
     ev_frames: jnp.ndarray,
     *,
     plan: SweepPlan,
     n_bits: int = 4096,
+    frame0=0,
+    total_frames: int | None = None,
+    decide: bool = False,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ):
@@ -47,11 +68,16 @@ def net_sweep(
     query's slots) and the accepted-bit count per frame
     (``posterior ~ numer / denom``, noise ``~ sqrt(p (1-p) / denom)``).  For
     an all-binary plan this is exactly the old one-column-per-query layout.
+    With ``decide=True`` a third array ``(B, n_q) int32`` of per-query argmax
+    values is appended -- bit-identical to argmaxing the posterior, computed
+    from the same in-register counts.
 
     Every frame draws an independent joint sample (the frame index is folded
     into the entropy counters), which is what the physical memristor array
     provides for free -- the fused path makes it the cheap mode instead of a
-    ``B x`` penalty.
+    ``B x`` penalty.  ``frame0`` (int or traced uint32 scalar) and
+    ``total_frames`` (static int) let a shard of a larger launch draw the
+    global batch's entropy for its frame slice.
     """
     if n_bits % 32:
         raise ValueError("n_bits must be a multiple of 32 (packed words)")
@@ -69,6 +95,8 @@ def net_sweep(
         block_w = backend.pick_block(n_bits // 32, 256)
         return net_sweep_pallas(
             kd, ev_k, plan=plan, n_bits=n_bits,
+            frame0=frame0, total_frames=total_frames, decide=decide,
             block_f=block_f, block_w=block_w, interpret=interpret,
         )
-    return net_sweep_ref(kd, ev, plan, n_bits)
+    return net_sweep_ref(kd, ev, plan, n_bits, frame0=frame0,
+                         total_frames=total_frames, decide=decide)

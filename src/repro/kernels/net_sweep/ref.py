@@ -5,6 +5,14 @@ node stream is generated in-register from counter bit-planes, conditioned, and
 popcount-reduced in a single XLA fusion -- no per-node stream, no entropy
 word, and no intermediate sample ever reaches HBM.  The Pallas kernel runs the
 same body per tile, so the two are bit-identical.
+
+``frame0`` / ``total_frames`` place this call inside a larger logical launch:
+a shard of a ``shard_map`` sweep passes its global frame origin and the global
+frame count, and -- because the entropy counter is a pure function of the
+*global* (node, frame, word) index -- produces exactly the words the
+single-device sweep would for its slice.  ``decide=True`` appends the
+:func:`~repro.kernels.net_sweep.common.decide_counts` epilogue inside the same
+fusion (the counts never leave registers before the argmax).
 """
 
 from __future__ import annotations
@@ -16,10 +24,19 @@ from repro.kernels.net_sweep.common import SweepPlan, sweep_tile
 
 
 def net_sweep_ref(
-    kd: jnp.ndarray, ev: jnp.ndarray, plan: SweepPlan, n_bits: int
+    kd: jnp.ndarray,
+    ev: jnp.ndarray,
+    plan: SweepPlan,
+    n_bits: int,
+    frame0=0,
+    total_frames: int | None = None,
+    decide: bool = False,
 ):
     """kd (2,) u32 seed words, ev (B, n_ev) int32
-    -> (numer (B, n_value_slots) i32, denom (B,) i32)."""
+    -> (numer (B, n_value_slots) i32, denom (B,) i32[, decisions (B, n_q) i32]).
+    """
     b = ev.shape[0]
     w = bitops.n_words(n_bits)
-    return sweep_tile(plan, kd[0], kd[1], ev, 0, 0, b, w, w, b)
+    total = b if total_frames is None else total_frames
+    return sweep_tile(plan, kd[0], kd[1], ev, frame0, 0, b, w, w, total,
+                      decide=decide)

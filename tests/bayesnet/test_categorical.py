@@ -333,9 +333,14 @@ def test_decide_argmaxes_the_posterior():
     net = compile_network(spec, n_bits=1 << 13)
     # unambiguous frames: strong vehicle evidence vs strong nothing
     ev = np.asarray([[0, 2, 2, 2], [0, 0, 0, 0]])
-    dec, acc = net.decide(jax.random.PRNGKey(0), ev, decide_bits=1024)
+    post, dec, acc = net.decide(jax.random.PRNGKey(0), ev)
     dec = np.asarray(dec)
     qi = net.queries.index("obstacle")
     assert dec.shape == (2, 2)
     assert dec[0, qi] == 2                # vehicle
     assert dec[1, qi] == 0                # none
+    # the in-kernel epilogue IS the posterior argmax, and the posterior it
+    # rides along with is the one `run` returns
+    run_post, _ = net.run(jax.random.PRNGKey(0), ev)
+    np.testing.assert_array_equal(np.asarray(post), np.asarray(run_post))
+    np.testing.assert_array_equal(dec, np.argmax(np.asarray(post), axis=-1))

@@ -225,6 +225,94 @@ def test_deterministic_nodes_and_extreme_thresholds():
     assert np.all(np.abs(post[:, 2] - 0.25) < 4 * sigma + 2 / 256)
 
 
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_fused_decide_bit_identical_to_posterior_argmax(name):
+    """The in-kernel decision epilogue == argmaxing `run`'s posterior, and the
+    posterior rides along unchanged -- one launch, same numbers."""
+    spec = by_name(name)
+    ev = sample_evidence(spec, jax.random.PRNGKey(21), 48)
+    net = compile_network(spec, n_bits=2048)
+    assert net.fused
+    post, acc = net.run(jax.random.PRNGKey(2), ev)
+    post_d, dec, acc_d = net.decide(jax.random.PRNGKey(2), ev)
+    post, dec = np.asarray(post), np.asarray(dec)
+    np.testing.assert_array_equal(post, np.asarray(post_d))
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc_d))
+    if post.ndim == 2:      # binary: value 1 iff P(q=1) > 0.5, ties to 0
+        want = (post > 0.5).astype(np.int32)
+    else:
+        want = np.argmax(post, axis=-1).astype(np.int32)
+    np.testing.assert_array_equal(dec, want)
+
+
+def test_fused_decide_tie_break_matches_posterior_argmax():
+    """Regression: exact count ties (here accepted=3 split 1/1/1 across
+    values 0/2/3) once flipped the float argmax because P(0) was computed as
+    1 - sum(float slots), one ULP below the tied slots.  The count-exact
+    assembler makes equal counts equal floats, so the identity holds even in
+    the deep low-acceptance regime."""
+    spec = by_name("obstacle-class")
+    net = compile_network(spec, n_bits=512)
+    ev = sample_evidence(spec, jax.random.PRNGKey(0), 64)
+    post, dec, acc = net.decide(jax.random.PRNGKey(100), ev)
+    post, dec = np.asarray(post), np.asarray(dec)
+    np.testing.assert_array_equal(dec, np.argmax(post, axis=-1))
+    # equal counts -> equal floats: the tied frame's vector is exactly uniform
+    assert np.any(np.asarray(acc) < 10)     # the regime that exposed the bug
+
+
+def test_fused_and_unfused_decide_agree():
+    """Counts-argmax (fused) and posterior-argmax (unfused) are the same
+    decision rule over the same tie-break."""
+    spec = by_name("obstacle-class")
+    ev = sample_evidence(spec, jax.random.PRNGKey(5), 32)
+    fused = compile_network(spec, n_bits=1 << 14)
+    unfused = compile_network(spec, n_bits=1 << 14, fused=False)
+    _, dec_f, _ = fused.decide(jax.random.PRNGKey(1), ev)
+    post_u, dec_u, _ = unfused.decide(jax.random.PRNGKey(1), ev)
+    # two independent samplers: decisions agree wherever the posterior is not
+    # on the decision boundary within stochastic noise; check the rule itself
+    np.testing.assert_array_equal(
+        np.asarray(dec_u), np.argmax(np.asarray(post_u), axis=-1)
+    )
+    agree = np.mean(np.asarray(dec_f) == np.asarray(dec_u))
+    assert agree > 0.9, agree
+
+
+def test_net_sweep_decide_kernel_bitexact_multi_word_tile():
+    """The kernel's decide path is bit-exact vs the ref both when the word
+    axis fits one tile (in-register epilogue) and when it is tiled (epilogue
+    over the summed partials)."""
+    from repro.core import rng as _rng
+    from repro.kernels.net_sweep.kernel import net_sweep_pallas
+
+    spec = by_name("intersection-cat")
+    plan = sweep_plan(spec, spec.queries, spec.evidence)
+    ev = sample_evidence(spec, jax.random.PRNGKey(6), 16)
+    kd = _rng.seed_words(jax.random.PRNGKey(4))
+    nr, dr, decr = net_sweep(jax.random.PRNGKey(4), ev, plan=plan,
+                             n_bits=2048, decide=True, use_kernel=False)
+    for block_w in (64, 16):     # 64 words = one tile; 16 = four tiles
+        nk, dk, deck = net_sweep_pallas(
+            kd, jnp.asarray(ev, jnp.int32), plan=plan, n_bits=2048,
+            decide=True, block_w=block_w, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+        np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+        np.testing.assert_array_equal(np.asarray(deck), np.asarray(decr))
+
+
+def test_sweep_tile_decide_rejects_partial_word_tiles():
+    from repro.kernels.net_sweep.common import sweep_tile
+
+    spec = by_name("pedestrian-night")
+    plan = sweep_plan(spec, spec.queries, spec.evidence)
+    ev = jnp.zeros((4, len(plan.evidence)), jnp.int32)
+    with pytest.raises(ValueError, match="full word axis"):
+        sweep_tile(plan, jnp.uint32(1), jnp.uint32(2), ev, 0, 0, 4, 8, 16, 4,
+                   decide=True)
+
+
 def test_fused_requires_ratio_and_independent_entropy():
     spec = by_name("sensor-degradation")
     with pytest.raises(ValueError):
@@ -239,3 +327,8 @@ def test_fused_requires_ratio_and_independent_entropy():
     # an explicit row-encode request means the unfused per-node lowering
     assert compile_network(spec, n_bits=1024, mux_mode="rows").fused is False
     assert compile_network(spec, n_bits=1024).fused is True
+    # frame sharding is a fused-only feature (unfused entropy is batch-shaped)
+    with pytest.raises(ValueError, match="fused"):
+        compile_network(spec, n_bits=1024, share_entropy=True, devices=8)
+    # devices=1 is the explicit single-device spelling, valid everywhere
+    assert compile_network(spec, n_bits=1024, devices=1).n_shards == 1

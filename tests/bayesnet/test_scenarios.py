@@ -167,6 +167,71 @@ def test_frame_driver_categorical_posteriors():
         assert post[1, 2] == 0.0 and post[2, 2] == 0.0
 
 
+def test_frame_driver_async_matches_sync():
+    """Pipelined dispatch returns bit-identical posteriors to the sync path
+    for the same (base_key, salt), with submission-order rid mapping."""
+    spec = by_name("pedestrian-night")
+    net = compile_network(spec, n_bits=1024)
+    ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(9), 21))
+    sync = FrameDriver(net, max_batch=8, salt=77)
+    pipe = FrameDriver(net, max_batch=8, salt=77)
+    sync.submit(ev)
+    pipe.submit(ev)
+    out_s = sync.drain()
+    out_p = pipe.drain_async()
+    assert sorted(out_s) == sorted(out_p) == list(range(21))
+    for rid in out_s:
+        np.testing.assert_array_equal(out_s[rid][0], out_p[rid][0])
+        assert out_s[rid][1] == out_p[rid][1]
+
+
+def test_frame_driver_nonblocking_step_and_harvest():
+    spec = by_name("sensor-degradation")
+    net = compile_network(spec, n_bits=1024)
+    ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(4), 12))
+    drv = FrameDriver(net, max_batch=4, salt=3)
+    drv.submit(ev)
+    assert drv.step(block=False) == {}          # dispatched, not harvested
+    assert drv.in_flight == 1 and drv.pending == 8
+    drv.step(block=False)
+    assert drv.in_flight == 2
+    out = drv.harvest()                          # the one sync point
+    assert drv.in_flight == 0 and sorted(out) == list(range(8))
+    # a blocking step returns its own launch AND anything left in flight
+    drv.step(block=False)
+    out = drv.step()
+    assert sorted(out) == list(range(8, 12)) and drv.in_flight == 0
+    # drain() with an empty queue still harvests parked async launches
+    drv.submit(ev[:3])
+    drv.step(block=False)
+    assert drv.pending == 0 and drv.in_flight == 1
+    out = drv.drain()
+    assert sorted(out) == [12, 13, 14] and drv.in_flight == 0
+
+
+def test_frame_driver_tail_padding_buckets():
+    """A 1-frame step on a wide driver launches a 1-lane batch, not
+    max_batch lanes: the padded-tail entropy bill is gone."""
+    spec = by_name("sensor-degradation")
+    net = compile_network(spec, n_bits=1024)
+    n_ev = len(net.evidence)
+    drv = FrameDriver(net, max_batch=1024, salt=1)
+    ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(5), 21))
+    drv.submit(ev[:1])
+    out = drv.step()
+    assert drv.last_launch_shape == (1, n_ev)
+    assert list(out) == [0]
+    # 5 pending -> 8-lane bucket (pad replicates the last real frame)
+    drv.submit(ev[:5])
+    out = drv.step()
+    assert drv.last_launch_shape == (8, n_ev)
+    assert sorted(out) == [1, 2, 3, 4, 5]
+    # full queue still uses the max_batch-capped bucket
+    drv.submit(np.repeat(ev, 80, axis=0)[:1030])
+    drv.step()
+    assert drv.last_launch_shape == (1024, n_ev)
+
+
 def test_frame_driver_continuous_batching():
     spec = by_name("sensor-degradation")
     net = compile_network(spec, n_bits=1024)

@@ -1,0 +1,169 @@
+"""Sharded sweep semantics: bit-identity with the single-device program.
+
+Two layers of evidence:
+
+* **In-process stitching** (no extra devices needed): ``net_sweep`` with
+  ``frame0`` / ``total_frames`` composes shards by hand and must reproduce
+  the full-batch launch word-for-word -- the counter-entropy argument
+  (DESIGN.md §11) reduced to its mechanical core.
+* **Real 8-device shard_map** (subprocess, like
+  ``tests/distributed/test_multidevice.py``, because jax pins the device
+  count at first init): ``compile_network(devices=8)`` must match the
+  single-device program bit-for-bit on every scenario -- binary and
+  categorical -- and on randomized k-ary DAGs, for both ``run`` and the
+  fused ``decide`` epilogue, with indivisible batches falling back cleanly.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bayesnet import by_name, sample_evidence, sweep_plan
+from repro.kernels.net_sweep import net_sweep
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+
+@pytest.mark.parametrize("name", ["pedestrian-night", "obstacle-class"])
+def test_hand_stitched_shards_bit_identical(name):
+    """Three 8-frame shards with global origins == one 24-frame launch."""
+    spec = by_name(name)
+    plan = sweep_plan(spec, spec.queries, spec.evidence)
+    ev = jnp.asarray(sample_evidence(spec, jax.random.PRNGKey(1), 24))
+    key = jax.random.PRNGKey(0)
+    nf, df = net_sweep(key, ev, plan=plan, n_bits=1024)
+    parts = [
+        net_sweep(key, ev[i * 8 : (i + 1) * 8], plan=plan, n_bits=1024,
+                  frame0=i * 8, total_frames=24)
+        for i in range(3)
+    ]
+    np.testing.assert_array_equal(
+        np.asarray(nf), np.concatenate([np.asarray(p[0]) for p in parts])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(df), np.concatenate([np.asarray(p[1]) for p in parts])
+    )
+
+
+def test_stitched_kernel_matches_ref_with_frame_origin():
+    """The Pallas kernel honours the global frame origin exactly as the ref."""
+    spec = by_name("intersection-cat")
+    plan = sweep_plan(spec, spec.queries, spec.evidence)
+    ev = jnp.asarray(sample_evidence(spec, jax.random.PRNGKey(2), 16))
+    key = jax.random.PRNGKey(3)
+    for f0 in (0, 8):
+        nk, dk = net_sweep(key, ev[f0 : f0 + 8], plan=plan, n_bits=1024,
+                           frame0=f0, total_frames=16,
+                           use_kernel=True, interpret=True)
+        nr, dr = net_sweep(key, ev[f0 : f0 + 8], plan=plan, n_bits=1024,
+                           frame0=f0, total_frames=16, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+        np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+
+from repro.bayesnet import (
+    SCENARIOS, by_name, compile_network, sample_evidence, FrameDriver,
+)
+from repro.bayesnet.spec import NetworkSpec, Node
+from repro.distributed import context as dctx
+
+assert len(jax.devices()) == 8
+key = jax.random.PRNGKey(0)
+
+# --- every scenario: sharded == single-device, run AND decide, bit for bit --
+for name in sorted(SCENARIOS):
+    spec = by_name(name)
+    ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(1), 16))
+    single = compile_network(spec, n_bits=512)
+    shard = compile_network(spec, n_bits=512, devices=8)
+    assert shard.n_shards == 8 and shard.shard_axes == ("frames",), name
+    p1, a1 = single.run(key, ev)
+    p8, a8 = shard.run(key, ev)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a8))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p8))
+    pd1, d1, ad1 = single.decide(key, ev)
+    pd8, d8, ad8 = shard.decide(key, ev)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d8))
+    np.testing.assert_array_equal(np.asarray(pd8), np.asarray(p1))
+    np.testing.assert_array_equal(np.asarray(ad8), np.asarray(a1))
+    # decisions argmax the posterior (binary: value 1 iff P > 0.5)
+    post = np.asarray(p1)
+    want = (post > 0.5).astype(np.int32) if post.ndim == 2 \
+        else np.argmax(post, axis=-1).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(d1), want)
+    # indivisible batch falls back to the single-device launch
+    p_odd, _ = shard.run(key, ev[:13])
+    assert np.asarray(p_odd).shape[0] == 13
+    print("scenario ok:", name)
+
+# --- randomized k-ary DAGs ---------------------------------------------------
+rs = np.random.RandomState(0)
+for trial in range(4):
+    n = int(rs.randint(4, 8))
+    nodes = []
+    for i in range(n):
+        card = int(rs.randint(2, 5))
+        m = int(min(i, rs.randint(0, 3)))
+        parents = tuple(
+            f"n{j}" for j in sorted(rs.choice(i, size=m, replace=False))
+        ) if m else ()
+        pcards = [next(nd.k for nd in nodes if nd.name == p) for p in parents]
+        n_rows = int(np.prod(pcards)) if pcards else 1
+        # plain floats: sharded-vs-single compares two lowerings of the SAME
+        # quantised network, no oracle involved, so no DAC-grid snapping needed
+        rows = tuple(tuple(rs.dirichlet(np.ones(card))) for _ in range(n_rows))
+        nodes.append(Node(f"n{i}", parents, rows, k=card))
+    names = [nd.name for nd in nodes]
+    ev_names = tuple(str(e) for e in rs.choice(names[1:], size=2, replace=False))
+    queries = tuple(nm for nm in names if nm not in ev_names)[:2]
+    spec = NetworkSpec(name=f"rand{trial}", nodes=tuple(nodes),
+                       evidence=ev_names, queries=queries)
+    frames = np.zeros((8, len(ev_names)), np.int32)
+    for c, e in enumerate(ev_names):
+        frames[:, c] = rs.randint(0, spec.card(e), size=8)
+    single = compile_network(spec, n_bits=512)
+    shard = compile_network(spec, n_bits=512, devices=8)
+    p1, a1 = single.run(jax.random.PRNGKey(trial), frames)
+    p8, a8 = shard.run(jax.random.PRNGKey(trial), frames)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p8))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a8))
+    print("random dag ok:", trial, spec.name)
+
+# --- ambient mesh pickup + sharded FrameDriver async == sync ----------------
+spec = by_name("sensor-degradation")
+with dctx.mesh_context(dctx.frame_mesh(8)):
+    net = compile_network(spec, n_bits=512)
+assert net.n_shards == 8
+ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(7), 24))
+sync = FrameDriver(net, max_batch=8, salt=11); sync.submit(ev)
+pipe = FrameDriver(net, max_batch=8, salt=11); pipe.submit(ev)
+rs_, rp = sync.drain(), pipe.drain_async()
+assert sorted(rs_) == sorted(rp) == list(range(24))
+for r in rs_:
+    np.testing.assert_array_equal(rs_[r][0], rp[r][0])
+    assert rs_[r][1] == rp[r][1]
+print("sharded driver async == sync ok")
+print("ALL OK")
+"""
+
+
+def test_sharded_eight_devices_bit_identical():
+    """The full 8-device matrix, in a subprocess with forced host devices."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env,
+        capture_output=True, text=True, timeout=1800,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "ALL OK" in proc.stdout
