@@ -18,6 +18,7 @@ def main() -> None:
         bench_fig3_inference,
         bench_fig4_fusion,
         bench_latency,
+        bench_reliability,
         bench_roofline,
         bench_table_s1,
         common,
@@ -32,6 +33,7 @@ def main() -> None:
         bench_fig3_inference,
         bench_fig4_fusion,
         bench_bayesnet,
+        bench_reliability,
         bench_latency,
         bench_roofline,
     ):

@@ -7,13 +7,20 @@ stochastic domain (DESIGN.md SS8-SS10).
                   frame axis bit-identically, decide rides an in-kernel
                   argmax epilogue) or per-node rng/node_mux/cordiv packed
                   programs (verification baseline); k-ary nodes ride value
-                  bit-planes + 8-bit DAC CDFs
-    analytic.py   exact mixed-radix enumeration oracle + ancestral sampling
+                  bit-planes + 8-bit DAC CDFs; noise= perturbs every DAC
+                  threshold through the crossbar non-ideality model
+    noise.py      NoiseModel: plan-build-time device-to-device / read-noise /
+                  IR-drop / stuck-at perturbation of the DAC thresholds
+    analytic.py   exact mixed-radix enumeration oracle + ancestral sampling;
+                  noise= builds the perturbed-CPT oracle twin
+    reliability.py decision-margin confidence signal, RetryPolicy, and the
+                  flip-rate / harvest reliability statistics
     scenarios.py  5-12 node driving networks over data/detection statistics
                   (binary quartet + categorical trio)
     driver.py     serve-style continuous batching of evidence frames, with
-                  non-blocking dispatch (step(block=False) / drain_async)
-                  and power-of-two launch buckets for short tails
+                  non-blocking dispatch (step(block=False) / drain_async),
+                  power-of-two launch buckets for short tails, and
+                  confidence-gated retry with escalating n_bits (retry=)
 """
 
 from repro.bayesnet.analytic import make_posterior_fn, sample_evidence  # noqa: F401
@@ -24,5 +31,13 @@ from repro.bayesnet.compile import (  # noqa: F401
     sweep_plan,
 )
 from repro.bayesnet.driver import FrameDriver  # noqa: F401
+from repro.bayesnet.noise import NoiseModel, perturbed_cdf_rows  # noqa: F401
+from repro.bayesnet.reliability import (  # noqa: F401
+    FrameReport,
+    ReliabilityStats,
+    RetryPolicy,
+    decision_confidence,
+    flip_rate,
+)
 from repro.bayesnet.scenarios import SCENARIOS, by_name  # noqa: F401
 from repro.bayesnet.spec import NetworkSpec, Node  # noqa: F401

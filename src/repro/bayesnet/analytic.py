@@ -15,6 +15,17 @@ per-value probabilities -- so oracle-vs-stochastic comparisons isolate the
 stochastic noise from the (documented, bounded) quantisation bias.  For a
 binary node this reduces to the classic ``round(p * 256) / 256``.
 
+``noise=`` (a :class:`~repro.bayesnet.noise.NoiseModel`) makes this the
+**perturbed-CPT oracle twin** of ``compile_network(noise=...)``: the same
+deterministic threshold perturbation the compiler bakes into its plan is
+applied here, and the enumeration runs over the *perturbed* integer
+thresholds differenced back to probabilities.  The compiled program then
+samples exactly the network this oracle enumerates, so 3-sigma agreement
+tests keep an exact ground truth under any noise level.  The perturbation
+acts on the integer DAC grid, so ``noise`` subsumes ``dac_quantize``: the
+perturbed thresholds ARE the quantisation, and the flag is ignored when a
+model is given.
+
 Posterior layout mirrors the compiler: all-binary query sets keep the classic
 ``(B, n_q)`` array of ``P(q=1)``; any k-ary query switches to ``(B, n_q,
 max_k)`` normalised per-value posteriors (zero-padded past each query's
@@ -32,16 +43,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bayesnet.noise import NoiseModel, perturbed_cdf_rows
 from repro.bayesnet.spec import NetworkSpec
 from repro.core import rng
 
 _MAX_STATES = 1 << 20
 
 
-def _node_rows(spec: NetworkSpec, name: str, dac_quantize: bool) -> np.ndarray:
-    """(L, k) float32 canonical (optionally DAC-snapped) CPT rows."""
+def _node_rows(
+    spec: NetworkSpec,
+    name: str,
+    dac_quantize: bool,
+    perturbed=None,
+) -> np.ndarray:
+    """(L, k) float32 canonical (optionally DAC-snapped / perturbed) CPT rows.
+
+    ``perturbed`` (a name -> integer CDF rows dict from
+    :func:`~repro.bayesnet.noise.perturbed_cdf_rows`) takes precedence: the
+    perturbed thresholds are differenced back to per-value probabilities, the
+    exact distribution the noisy compiled program samples.
+    """
     rows = spec.cpt_rows(name)
-    if dac_quantize:
+    if perturbed is not None:
+        snapped = []
+        for prow in perturbed[name]:
+            bounds = (256,) + tuple(prow) + (0,)
+            snapped.append(
+                tuple((bounds[v] - bounds[v + 1]) / 256.0 for v in range(len(prow) + 1))
+            )
+        rows = tuple(snapped)
+    elif dac_quantize:
         snapped = []
         for row in rows:
             bounds = (256,) + rng.cdf_thresholds_int(row) + (0,)
@@ -52,12 +83,17 @@ def _node_rows(spec: NetworkSpec, name: str, dac_quantize: bool) -> np.ndarray:
     return np.asarray(rows, np.float32)
 
 
-def joint_table(spec: NetworkSpec, dac_quantize: bool = False):
+def joint_table(
+    spec: NetworkSpec,
+    dac_quantize: bool = False,
+    noise: NoiseModel | None = None,
+):
     """Returns (states (S, N) int32, joint (S,) float32), S = prod(cards).
 
     Column ``j`` of ``states`` is the value of ``spec.nodes[j]`` (node 0 is
     the fastest-cycling mixed-radix digit, the k-ary generalisation of the
     old bit grid); ``joint`` is the exact probability of each assignment.
+    ``noise`` enumerates the *perturbed* network (see module docstring).
     """
     cards = spec.cards()
     total = math.prod(cards)
@@ -66,6 +102,7 @@ def joint_table(spec: NetworkSpec, dac_quantize: bool = False):
             f"enumeration oracle capped at {_MAX_STATES} joint states, got {total}"
         )
     idx = {node.name: j for j, node in enumerate(spec.nodes)}
+    perturbed = perturbed_cdf_rows(spec, noise) if noise is not None else None
     s = np.arange(total, dtype=np.int64)
     cols = []
     for c in cards:
@@ -74,7 +111,7 @@ def joint_table(spec: NetworkSpec, dac_quantize: bool = False):
     states = jnp.asarray(np.stack(cols, axis=-1))
     joint = jnp.ones((total,), jnp.float32)
     for node in spec.nodes:
-        cpt = jnp.asarray(_node_rows(spec, node.name, dac_quantize))
+        cpt = jnp.asarray(_node_rows(spec, node.name, dac_quantize, perturbed))
         # Mixed-radix CPT row index: first parent is the most significant
         # digit (spec.py convention).
         row = jnp.zeros((total,), jnp.int32)
@@ -89,6 +126,7 @@ def make_posterior_fn(
     queries: Sequence[str] | None = None,
     evidence: Sequence[str] | None = None,
     dac_quantize: bool = False,
+    noise: NoiseModel | None = None,
 ) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]:
     """Compile the exact batched-posterior function for a spec.
 
@@ -97,11 +135,13 @@ def make_posterior_fn(
     vectorised over frames.  Frames columns follow the ``evidence`` order and
     hold one value in ``[0, card)`` per node; ``p_evidence`` is the evidence
     marginal (0 where impossible; the posterior then falls back to 0.5 /
-    uniform).
+    uniform).  ``noise`` builds the perturbed-CPT oracle twin of
+    ``compile_network(noise=...)`` -- exact ground truth for the noisy
+    program (see module docstring).
     """
     queries = tuple(queries if queries is not None else spec.queries)
     evidence = tuple(evidence if evidence is not None else spec.evidence)
-    states, joint = joint_table(spec, dac_quantize=dac_quantize)
+    states, joint = joint_table(spec, dac_quantize=dac_quantize, noise=noise)
     ev_cols = jnp.asarray([spec.index(e) for e in evidence], jnp.int32)
     q_cols = jnp.asarray([spec.index(q) for q in queries], jnp.int32)
     q_cards = tuple(spec.card(q) for q in queries)

@@ -61,6 +61,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.bayesnet.noise import NoiseModel, perturbed_cdf_rows
 from repro.bayesnet.spec import NetworkSpec
 from repro.core import bitops, cordiv, rng
 from repro.distributed import context as dist_context
@@ -203,6 +204,7 @@ class CompiledNetwork:
     _decide: Callable = dataclasses.field(repr=False)
     n_shards: int = 1
     shard_axes: Tuple[str, ...] = ()
+    noise: NoiseModel | None = None
 
     def _check_frames(self, ev_frames) -> jnp.ndarray:
         ev = jnp.asarray(ev_frames, jnp.int32)
@@ -235,6 +237,7 @@ def sweep_plan(
     spec: NetworkSpec,
     queries: Sequence[str],
     evidence: Sequence[str],
+    noise: NoiseModel | None = None,
 ) -> SweepPlan:
     """Lower a spec to the static :class:`SweepPlan` the fused kernel consumes.
 
@@ -242,14 +245,21 @@ def sweep_plan(
     ``card - 1`` cumulative 8-bit DAC comparator thresholds
     (``rng.cdf_thresholds_int`` -- for binary nodes exactly the old
     ``round(p * 256)`` grid), so the fused sweep samples the identical
-    quantised network every other encoder does.
+    quantised network every other encoder does.  ``noise`` perturbs every
+    threshold through the crossbar non-ideality model
+    (:mod:`repro.bayesnet.noise`) before it is baked into the plan --
+    ``noise=None`` produces exactly the clean plan.
     """
     order = spec.topo_order()
     index = {name: i for i, name in enumerate(order)}
+    perturbed = perturbed_cdf_rows(spec, noise) if noise is not None else None
     nodes = []
     for name in order:
         node = spec.node(name)
-        rows = tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name))
+        if perturbed is not None:
+            rows = perturbed[name]
+        else:
+            rows = tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name))
         nodes.append((tuple(index[p] for p in node.parents), spec.card(name), rows))
     return SweepPlan(
         nodes=tuple(nodes),
@@ -265,6 +275,7 @@ def lower_streams(
     batch: int | None = None,
     *,
     mux_mode: str = "gather",
+    noise: NoiseModel | None = None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ):
@@ -277,8 +288,16 @@ def lower_streams(
     their children exactly once -- the correlation structure the joint sample
     requires.  Binary sub-networks draw entropy through exactly the
     pre-categorical code path, keeping their streams bit-identical.
+
+    ``noise`` routes every node through the SAME perturbed integer thresholds
+    the fused plan bakes in (:func:`~repro.bayesnet.noise.perturbed_cdf_rows`).
+    Binary nodes feed the perturbed threshold back as ``t / 256`` -- exact in
+    float32, so the encoder's ``round(p * 256)`` recovers ``t`` bit-for-bit
+    and the two lowerings keep sampling the identical perturbed network.
+    ``noise=None`` leaves every code path untouched.
     """
     order = spec.topo_order()
+    perturbed = perturbed_cdf_rows(spec, noise) if noise is not None else None
     streams = {}
     for i, name in enumerate(order):
         node = spec.node(name)
@@ -287,18 +306,29 @@ def lower_streams(
         sub = jax.random.fold_in(key, i)
         if not node.parents:
             if card == 2:
-                p = jnp.float32(spec.cpt_rows(name)[0][1])
+                if perturbed is not None:
+                    p = jnp.float32(perturbed[name][0][0] / 256.0)
+                else:
+                    p = jnp.float32(spec.cpt_rows(name)[0][1])
                 if batch is not None:
                     p = jnp.full((batch,), p, jnp.float32)
                 streams[name] = (rng.encode_packed(sub, p, n_bits),)
             else:
-                cdf = rng.cdf_thresholds_int(spec.cpt_rows(name)[0])
+                if perturbed is not None:
+                    cdf = perturbed[name][0]
+                else:
+                    cdf = rng.cdf_thresholds_int(spec.cpt_rows(name)[0])
                 planes = rng.encode_packed_categorical(sub, cdf, n_bits, batch=batch)
                 streams[name] = tuple(planes[b] for b in range(planes.shape[0]))
         elif card == 2 and all(c == 2 for c in pcards):
-            cpt = jnp.asarray(
-                tuple(r[1] for r in spec.cpt_rows(name)), jnp.float32
-            )
+            if perturbed is not None:
+                cpt = jnp.asarray(
+                    tuple(r[0] / 256.0 for r in perturbed[name]), jnp.float32
+                )
+            else:
+                cpt = jnp.asarray(
+                    tuple(r[1] for r in spec.cpt_rows(name)), jnp.float32
+                )
             if batch is not None:
                 cpt = jnp.broadcast_to(cpt, (batch,) + cpt.shape)
             parents = jnp.stack([streams[pn][0] for pn in node.parents])
@@ -309,10 +339,13 @@ def lower_streams(
                 ),
             )
         else:
-            cdf = jnp.asarray(
-                tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name)),
-                jnp.uint32,
-            )
+            if perturbed is not None:
+                cdf = jnp.asarray(perturbed[name], jnp.uint32)
+            else:
+                cdf = jnp.asarray(
+                    tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name)),
+                    jnp.uint32,
+                )
             if batch is not None:
                 cdf = jnp.broadcast_to(cdf, (batch,) + cdf.shape)
             parents = jnp.stack(
@@ -362,6 +395,7 @@ def compile_network(
     estimator: str = "ratio",
     fused: bool | None = None,
     mux_mode: str = "gather",
+    noise: NoiseModel | None = None,
     devices: int | None = None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
@@ -372,6 +406,15 @@ def compile_network(
     applies (independent entropy + ratio estimator -- the production mode),
     the per-node unfused path otherwise.  ``fused=False`` forces the unfused
     program, the statistical verification baseline for the fused kernel.
+
+    ``noise`` (a :class:`~repro.bayesnet.noise.NoiseModel`) injects crossbar
+    non-idealities at plan-build time: every 8-bit DAC threshold the program
+    samples against is deterministically perturbed (device-to-device lognormal
+    spread, cycle-to-cycle read noise, position-dependent IR-drop, stuck-at
+    faults) before lowering, in both the fused and unfused paths.
+    ``noise=None`` (default) is bit-identical to a compile without the
+    argument; the exact perturbed ground truth comes from the oracle twin
+    ``make_posterior_fn(spec, noise=...)``.
 
     ``devices=N`` (fused only) wraps the sweep in one ``shard_map`` launch
     over the frame axis of an N-device mesh; with no ``devices`` argument an
@@ -398,6 +441,8 @@ def compile_network(
             "mux_mode='rows' (the binary row-encode baseline) does not "
             "support k-ary nodes; use the default 'gather'"
         )
+    if noise is not None and not isinstance(noise, NoiseModel):
+        raise TypeError(f"noise must be a NoiseModel or None, got {type(noise)!r}")
     q_cards = tuple(spec.card(q) for q in queries)
     assemble = _slot_assembler(q_cards)
     # The fused sweep samples with threshold-gather by construction, so a
@@ -421,7 +466,7 @@ def compile_network(
     mask = bitops.pad_mask(n_bits)
 
     if fused:
-        plan = sweep_plan(spec, queries, evidence)
+        plan = sweep_plan(spec, queries, evidence, noise=noise)
         assemble_counts = _count_assembler(q_cards)
         mesh, shard_axes = _resolve_frame_mesh(devices)
         n_shards = (
@@ -476,6 +521,7 @@ def compile_network(
             share_entropy=share_entropy, estimator=estimator, fused=True,
             query_cards=q_cards, _run=_run, _decide=_decide,
             n_shards=n_shards, shard_axes=shard_axes if mesh is not None else (),
+            noise=noise,
         )
 
     def slot_indicators(streams):
@@ -538,7 +584,8 @@ def compile_network(
         b = ev_frames.shape[0]
         streams = lower_streams(
             spec, key, n_bits, batch=None if share_entropy else b,
-            mux_mode=mux_mode, use_kernel=use_kernel, interpret=interpret,
+            mux_mode=mux_mode, noise=noise, use_kernel=use_kernel,
+            interpret=interpret,
         )
         ev_planes = tuple(streams[e] for e in evidence)
         slots = slot_indicators(streams)
@@ -565,5 +612,5 @@ def compile_network(
     return CompiledNetwork(
         spec=spec, queries=queries, evidence=evidence, n_bits=n_bits,
         share_entropy=share_entropy, estimator=estimator, fused=False,
-        query_cards=q_cards, _run=_run, _decide=_decide,
+        query_cards=q_cards, _run=_run, _decide=_decide, noise=noise,
     )

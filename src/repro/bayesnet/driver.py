@@ -36,6 +36,31 @@ launch index.  Pass an explicit ``salt`` (a driver id) to make a driver's key
 sequence reproducible across processes/restarts: drivers with the same
 ``(base_key, salt)`` replay the same launches, drivers differing in either
 draw disjoint entropy.
+
+**Confidence-gated retry.**  ``retry=RetryPolicy(...)`` makes reliability a
+measured, acted-on property: every harvested frame gets a decision-margin
+confidence (:func:`~repro.bayesnet.reliability.decision_confidence`), and
+frames below ``min_confidence`` are re-queued for a fresh launch -- new
+entropy via the launch counter, ``escalation``-times longer bitstream per
+attempt (escalated programs compile lazily, once per attempt level, and are
+cached like buckets).  After ``max_retries`` the frame is emitted anyway with
+``reliable=False`` -- graceful degradation, never a dropped frame.  Results
+keep the legacy ``{rid: (post, accepted)}`` shape; per-frame verdicts land in
+``driver.reports[rid]`` (:class:`~repro.bayesnet.reliability.FrameReport`)
+and aggregates in ``driver.stats``
+(:class:`~repro.bayesnet.reliability.ReliabilityStats`).  With retry enabled
+a ``step`` may dispatch several launches (one per pending attempt level plus
+the main batch); an explicit ``key`` is folded with the launch index within
+the step.  ``retry=None`` (default) is behaviour-identical to the
+pre-reliability driver.
+
+**Launch watchdog.**  Every dispatch's wall time feeds a
+:class:`~repro.distributed.fault.StragglerWatch` EWMA (the train-loop
+straggler detector, reused verbatim): dispatches slower than ``threshold x``
+the running mean -- a recompile for a new bucket shape, a contended device,
+host-side stalls -- are counted in ``stats.slow_launches``.  Under async
+dispatch the wall time covers trace/compile + enqueue, which is exactly the
+host-side latency a serving deployment cares about.
 """
 
 from __future__ import annotations
@@ -47,7 +72,14 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.bayesnet.compile import CompiledNetwork
+from repro.bayesnet.compile import CompiledNetwork, compile_network
+from repro.bayesnet.reliability import (
+    FrameReport,
+    ReliabilityStats,
+    RetryPolicy,
+    decision_confidence,
+)
+from repro.distributed.fault import StragglerWatch
 
 # Process-wide source of default driver salts (one per construction).
 _DRIVER_IDS = itertools.count()
@@ -60,11 +92,16 @@ class FrameDriver:
         max_batch: int = 256,
         base_key: jax.Array | None = None,
         salt: int | None = None,
+        retry: RetryPolicy | None = None,
+        watchdog: StragglerWatch | None = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if retry is not None and not isinstance(retry, RetryPolicy):
+            raise TypeError(f"retry must be a RetryPolicy or None, got {type(retry)!r}")
         self.net = net
         self.max_batch = int(max_batch)
+        self.retry = retry
         self._queue: deque = deque()
         self._next_rid = 0
         self.salt = next(_DRIVER_IDS) if salt is None else int(salt)
@@ -73,9 +110,16 @@ class FrameDriver:
         self._launches = 0
         self._dispatches = 0
         # dispatched-but-unharvested launches, in dispatch order:
-        # (ticket, taken rids, device posteriors, device accepted counts)
+        # (ticket, taken (rid, row, attempt, bits_before) tuples,
+        #  attempt level, device posteriors, device accepted counts)
         self._inflight: deque = deque()
         self.last_launch_shape: Optional[Tuple[int, int]] = None
+        # --- reliability layer (inert when retry is None) ---
+        self._nets: Dict[int, CompiledNetwork] = {0: net}
+        self._retry_q: deque = deque()   # (rid, row, attempt, bits_before)
+        self.reports: Dict[int, FrameReport] = {}
+        self.stats = ReliabilityStats()
+        self.watch = watchdog if watchdog is not None else StragglerWatch()
 
     # ------------------------------------------------------------- admission
     def submit(self, frames) -> List[int]:
@@ -95,6 +139,11 @@ class FrameDriver:
     @property
     def pending(self) -> int:
         return len(self._queue)
+
+    @property
+    def pending_retries(self) -> int:
+        """Frames awaiting a confidence-gated re-launch."""
+        return len(self._retry_q)
 
     @property
     def in_flight(self) -> int:
@@ -121,26 +170,71 @@ class FrameDriver:
             b <<= 1
         return min(b, self.max_batch)
 
-    def _dispatch(self, key: jax.Array | None) -> int:
-        """Pack one batch, launch it (async), park the device results."""
+    def _net_for(self, attempt: int) -> CompiledNetwork:
+        """The (lazily compiled, cached) program for one retry attempt level.
+
+        Attempt ``a`` runs ``escalation^a x`` the base stream length, capped
+        at the policy's ``max_n_bits``; the escalated program reuses the base
+        network's full lowering configuration (queries, evidence, estimator,
+        entropy mode, noise model) on a single device -- retry batches are
+        short tails, not the place for shard_map.
+        """
+        if attempt not in self._nets:
+            assert self.retry is not None
+            n_bits = self.retry.n_bits_for(self.net.n_bits, attempt)
+            self._nets[attempt] = compile_network(
+                self.net.spec, n_bits, self.net.queries, self.net.evidence,
+                share_entropy=self.net.share_entropy,
+                estimator=self.net.estimator, fused=self.net.fused,
+                noise=self.net.noise, devices=1,
+            )
+        return self._nets[attempt]
+
+    def _launch(self, key: jax.Array | None, taken: list, attempt: int) -> int:
+        """Pack one batch at one attempt level, launch it, park the results."""
         if key is None:
             key = self._next_key()
-        taken = [
-            self._queue.popleft()
-            for _ in range(min(self.max_batch, len(self._queue)))
-        ]
-        ev = np.stack([row for _, row in taken])
+        ev = np.stack([row for _, row, _, _ in taken])
         n_real = ev.shape[0]
         bucket = self._bucket(n_real)
         if n_real < bucket:
             pad = np.repeat(ev[-1:], bucket - n_real, axis=0)
             ev = np.concatenate([ev, pad], axis=0)
         self.last_launch_shape = ev.shape
-        post, accepted = self.net.run(key, ev)
+        net = self.net if attempt == 0 else self._net_for(attempt)
+        self.watch.step_start()
+        post, accepted = net.run(key, ev)
         ticket = self._dispatches
         self._dispatches += 1
-        self._inflight.append((ticket, [rid for rid, _ in taken], post, accepted))
+        if self.watch.step_end(ticket):
+            self.stats.slow_launches += 1
+        self.stats.launches += 1
+        self._inflight.append((ticket, taken, attempt, post, accepted))
         return ticket
+
+    def _dispatch(self, key: jax.Array | None) -> int:
+        """Pack one main-queue batch (attempt 0), launch it (async)."""
+        taken = [
+            (rid, row, 0, 0)
+            for rid, row in (
+                self._queue.popleft()
+                for _ in range(min(self.max_batch, len(self._queue)))
+            )
+        ]
+        return self._launch(key, taken, 0)
+
+    def _dispatch_retries(self, key: jax.Array | None) -> int:
+        """Launch one batch from the retry queue (head's attempt level)."""
+        attempt = self._retry_q[0][2]
+        taken, rest = [], deque()
+        while self._retry_q:
+            item = self._retry_q.popleft()
+            if item[2] == attempt and len(taken) < self.max_batch:
+                taken.append(item)
+            else:
+                rest.append(item)
+        self._retry_q = rest
+        return self._launch(key, taken, attempt)
 
     def harvest(self) -> Dict[int, Tuple[np.ndarray, int]]:
         """Block on every in-flight launch and return {rid: (post, accepted)}.
@@ -148,43 +242,85 @@ class FrameDriver:
         The single synchronisation point of the async mode: device arrays are
         converted to host arrays here (masking the padded lanes out -- only
         real rids appear), in dispatch order, so result mapping follows
-        submission order exactly as in the sync path.
+        submission order exactly as in the sync path.  With a retry policy,
+        under-confidence frames with budget left are re-queued instead of
+        returned (dispatch them with the next ``step``/``drain``); emitted
+        frames additionally gain a ``reports[rid]`` entry and roll into
+        ``stats``.
         """
         out: Dict[int, Tuple[np.ndarray, int]] = {}
         while self._inflight:
-            _, rids, post, accepted = self._inflight.popleft()
+            _, taken, attempt, post, accepted = self._inflight.popleft()
             post, accepted = np.asarray(post), np.asarray(accepted)
-            for i, rid in enumerate(rids):
+            if self.retry is None:
+                for i, (rid, _, _, _) in enumerate(taken):
+                    out[rid] = (post[i], int(accepted[i]))
+                continue
+            n_real = len(taken)
+            conf = decision_confidence(post[:n_real], accepted[:n_real])
+            n_bits = (self.net if attempt == 0 else self._nets[attempt]).n_bits
+            for i, (rid, row, _, bits_before) in enumerate(taken):
+                total = bits_before + n_bits
+                ok = bool(conf[i] >= self.retry.min_confidence)
+                if not ok and attempt < self.retry.max_retries:
+                    self._retry_q.append((rid, row, attempt + 1, total))
+                    continue
                 out[rid] = (post[i], int(accepted[i]))
+                self.reports[rid] = FrameReport(
+                    confidence=float(conf[i]), attempts=attempt + 1,
+                    n_bits=n_bits, total_bits=total, reliable=ok,
+                )
+                self.stats.record_frame(float(conf[i]), attempt, total, ok)
         return out
 
     def step(
         self, key: jax.Array | None = None, block: bool = True
     ) -> Dict[int, Tuple[np.ndarray, int]]:
-        """Run one batched launch over up to ``max_batch`` queued frames.
+        """Run one round of batched launches over the queued frames.
 
         ``block=True`` (default) harvests immediately and returns
-        {rid: (posteriors (n_q,), accepted bit count)} for this launch (plus
+        {rid: (posteriors (n_q,), accepted bit count)} for this round (plus
         any still-unharvested async launches).  ``block=False`` only
         *dispatches* -- the jit launch's device work proceeds asynchronously
         while the caller packs more frames -- and returns ``{}``; collect
         results later with :meth:`harvest`.  ``key=None`` uses the driver's
         own launch-counter key sequence.
+
+        Without a retry policy a round is exactly one launch (one batch off
+        the queue).  With one, pending retry batches launch first (one per
+        attempt level present, escalated programs), then the main batch; an
+        explicit ``key`` covers them all by folding the within-step launch
+        index (launch 0 uses ``key`` itself, so the no-retry case is
+        unchanged).
         """
-        if not self._queue:
+        if not self._queue and not self._retry_q:
             return self.harvest() if block else {}
-        self._dispatch(key)
+        n = 0
+
+        def sub():
+            nonlocal n
+            k = None if key is None else (
+                key if n == 0 else jax.random.fold_in(key, n)
+            )
+            n += 1
+            return k
+
+        while self._retry_q:
+            self._dispatch_retries(sub())
+        if self._queue:
+            self._dispatch(sub())
         return self.harvest() if block else {}
 
     def drain(self, key: jax.Array | None = None) -> Dict[int, Tuple[np.ndarray, int]]:
-        """Step until the queue is empty; returns all results keyed by rid.
+        """Step until the queue (and any retry backlog) is empty.
 
-        Any launches previously dispatched with ``step(block=False)`` are
-        harvested too, so ``drain`` is always the "collect everything"
-        call -- even when the queue itself is already empty.
+        Returns all results keyed by rid.  Any launches previously dispatched
+        with ``step(block=False)`` are harvested too, so ``drain`` is always
+        the "collect everything" call -- even when the queue itself is
+        already empty.
         """
         out: Dict[int, Tuple[np.ndarray, int]] = {}
-        while self._queue:
+        while self._queue or self._retry_q:
             if key is None:
                 sub = None
             else:
@@ -196,18 +332,27 @@ class FrameDriver:
     def drain_async(
         self, key: jax.Array | None = None
     ) -> Dict[int, Tuple[np.ndarray, int]]:
-        """Pipeline the whole queue: dispatch every launch, then one harvest.
+        """Pipeline the whole queue: dispatch every launch, then harvest.
 
         Each launch is dispatched while its predecessors' device work is
-        still in flight; ``block_until_ready`` happens once, inside the
-        final :meth:`harvest`.  Key sequencing and rid mapping are identical
-        to :meth:`drain`, so the posteriors are bit-identical to the sync
-        path for the same ``(base_key, salt)``.
+        still in flight; ``block_until_ready`` happens once per harvest
+        round, after everything dispatchable is in the air.  Key sequencing
+        and rid mapping are identical to :meth:`drain`, so without a retry
+        policy the posteriors are bit-identical to the sync path for the same
+        ``(base_key, salt)``.  With a retry policy each harvest may re-queue
+        under-confidence frames, which pipeline through further rounds until
+        none remain; retry-round launch *grouping* differs from ``drain``'s
+        (retries batch up across the whole round, and launch keys are drawn
+        in a different order), so sync and async posteriors agree only for
+        frames that never retried.
         """
-        while self._queue:
-            if key is None:
-                sub = None
-            else:
-                key, sub = jax.random.split(key)
-            self.step(sub, block=False)
-        return self.harvest()
+        out: Dict[int, Tuple[np.ndarray, int]] = {}
+        while self._queue or self._retry_q or self._inflight:
+            while self._queue or self._retry_q:
+                if key is None:
+                    sub = None
+                else:
+                    key, sub = jax.random.split(key)
+                self.step(sub, block=False)
+            out.update(self.harvest())
+        return out

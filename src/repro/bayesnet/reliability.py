@@ -1,0 +1,240 @@
+"""Decision reliability: confidence signal, retry policy, harvest statistics.
+
+The paper's claim is *timely reliable* decision-making: the stochastic
+readout must not only be fast, it must know when it has not yet accumulated
+enough evidence to commit to an action.  This module derives that signal from
+quantities every compiled launch already returns -- the posterior count
+ratios and the accepted-sample count -- and packages the policy knobs and
+bookkeeping the :class:`~repro.bayesnet.driver.FrameDriver` uses to act on
+it.
+
+**Confidence.**  For one query, the MAP decision flips iff the runner-up
+value out-draws the leader on a re-run.  With ``c1`` / ``c2`` accepted counts
+for the top two values, the count margin is asymptotically normal with
+variance ~ ``c1 + c2`` (binomial between the two leaders, conditioned on the
+rest), so
+
+    z = (c1 - c2) / sqrt(c1 + c2)
+
+is a decision-margin z-score and ``Phi(z)`` approximates the probability the
+decision survives a fresh launch.  A frame's confidence is the *minimum* over
+its queries (the decision vector is only as reliable as its shakiest entry),
+and exactly ``0`` where nothing was accepted -- a rejected frame carries no
+evidence at all, whatever the fallback posterior says.
+
+**Retry.**  :class:`RetryPolicy` bounds how hard the driver tries: frames
+below ``min_confidence`` are re-launched with fresh entropy and an
+``escalation``-times longer bitstream, at most ``max_retries`` times, never
+past ``max_n_bits``.  Budget exhaustion degrades gracefully: the frame is
+emitted with its best-effort posterior and ``reliable=False`` in its
+:class:`FrameReport`, never dropped.
+
+**Accounting.**  :class:`ReliabilityStats` aggregates per-harvest counters
+(retries, escalation histogram, slow launches flagged by the driver's
+wall-time watchdog, bit budget) so benchmarks can report retry overhead next
+to flip-rate; :func:`flip_rate` scores decision stability against a
+reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+_erf = np.vectorize(math.erf, otypes=[np.float64])
+
+
+def _phi(z: np.ndarray) -> np.ndarray:
+    """Standard normal CDF, elementwise."""
+    return 0.5 * (1.0 + _erf(np.asarray(z, np.float64) / math.sqrt(2.0)))
+
+
+def top2_margin_z(post: np.ndarray, accepted: np.ndarray) -> np.ndarray:
+    """Per-query decision-margin z-scores, shape ``(B, n_q)``.
+
+    ``post`` is a compiled-network posterior batch -- ``(B, n_q)`` of
+    ``P(q=1)`` for all-binary queries or ``(B, n_q, max_k)`` normalised
+    per-value posteriors -- and ``accepted`` the ``(B,)`` accepted-sample
+    counts.  Counts are reconstructed as ``post * accepted`` (the ratio
+    estimator's posteriors are exactly count fractions), the top two values
+    per query found, and ``z = (c1 - c2) / sqrt(max(c1 + c2, 1))``.
+    Rows with ``accepted == 0`` get ``z = 0`` for every query.
+    """
+    post = np.asarray(post, np.float64)
+    acc = np.asarray(accepted, np.float64)
+    if post.ndim == 2:                         # binary layout: P(q=1)
+        top = np.maximum(post, 1.0 - post) * acc[:, None]
+        second = acc[:, None] - top
+    else:                                      # k-ary layout: per-value
+        counts = post * acc[:, None, None]
+        counts = np.sort(counts, axis=-1)
+        top, second = counts[..., -1], counts[..., -2]
+    z = (top - second) / np.sqrt(np.maximum(top + second, 1.0))
+    return np.where(acc[:, None] > 0, z, 0.0)
+
+
+def decision_confidence(post: np.ndarray, accepted: np.ndarray) -> np.ndarray:
+    """Frame-level decision confidence in ``[0, 1]``, shape ``(B,)``.
+
+    ``Phi`` of the *minimum* per-query margin z-score (module docstring);
+    exactly ``0.0`` where ``accepted == 0``.
+    """
+    z = top2_margin_z(post, accepted)
+    conf = _phi(np.min(z, axis=-1))
+    return np.where(np.asarray(accepted) > 0, conf, 0.0)
+
+
+def flip_rate(decisions: np.ndarray, reference: np.ndarray) -> float:
+    """Fraction of per-query MAP decisions that differ from ``reference``.
+
+    Both arguments are ``(B, n_q)`` integer decision arrays (e.g. from
+    :meth:`CompiledNetwork.decide` under different noise / entropy); the
+    rate is elementwise over all ``B * n_q`` decisions.
+    """
+    d = np.asarray(decisions)
+    r = np.asarray(reference)
+    if d.shape != r.shape:
+        raise ValueError(f"decision shapes differ: {d.shape} vs {r.shape}")
+    if d.size == 0:
+        return 0.0
+    return float(np.mean(d != r))
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded confidence-gated retry (driver knob, see module docstring).
+
+    ``min_confidence``: emit without retry at or above this.  ``max_retries``:
+    re-launch budget per frame (attempts = 1 + retries).  ``escalation``:
+    n_bits multiplier per attempt (exponential -- a retry that was noise-bound
+    needs materially more evidence, not another coin flip at the same
+    length).  ``max_n_bits``: hard ceiling on any single attempt's stream
+    length (compile-size guard).
+    """
+
+    min_confidence: float = 0.9
+    max_retries: int = 2
+    escalation: int = 2
+    max_n_bits: int = 1 << 17
+
+    def __post_init__(self):
+        if not 0.0 <= self.min_confidence <= 1.0:
+            raise ValueError(
+                f"min_confidence must be in [0, 1], got {self.min_confidence}"
+            )
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.escalation < 1:
+            raise ValueError(f"escalation must be >= 1, got {self.escalation}")
+        if self.max_n_bits < 32 or self.max_n_bits % 32:
+            raise ValueError(
+                f"max_n_bits must be a positive multiple of 32, got {self.max_n_bits}"
+            )
+
+    def n_bits_for(self, base_n_bits: int, attempt: int) -> int:
+        """Stream length of attempt ``attempt`` (0-based), capped and 32-aligned."""
+        n = min(int(base_n_bits) * self.escalation**int(attempt), self.max_n_bits)
+        return max(32, (n // 32) * 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameReport:
+    """Per-frame reliability verdict attached by the retrying driver.
+
+    ``attempts`` counts launches this frame rode (1 = no retry); ``n_bits``
+    is the final attempt's stream length, ``total_bits`` the sum over all
+    attempts (the frame's whole entropy bill).  ``reliable`` is False only
+    when the retry budget ran out below ``min_confidence`` -- the posterior
+    is still the best-effort final attempt, never dropped.
+    """
+
+    confidence: float
+    attempts: int
+    n_bits: int
+    total_bits: int
+    reliable: bool
+
+
+@dataclasses.dataclass
+class ReliabilityStats:
+    """Mutable per-driver (or per-harvest) reliability accounting.
+
+    ``escalations`` maps final attempt index (0-based) to frames that
+    finished there -- ``{0: N}`` means no frame ever retried.  ``merge``
+    folds another instance in (shard / multi-driver aggregation).
+    """
+
+    frames: int = 0
+    launches: int = 0
+    retries: int = 0
+    unreliable: int = 0
+    slow_launches: int = 0
+    total_bits: int = 0
+    confidence_sum: float = 0.0
+    min_confidence: Optional[float] = None
+    escalations: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def record_frame(
+        self, confidence: float, final_attempt: int, total_bits: int, reliable: bool
+    ) -> None:
+        self.frames += 1
+        self.retries += int(final_attempt)
+        self.unreliable += int(not reliable)
+        self.total_bits += int(total_bits)
+        self.confidence_sum += float(confidence)
+        self.min_confidence = (
+            float(confidence) if self.min_confidence is None
+            else min(self.min_confidence, float(confidence))
+        )
+        self.escalations[int(final_attempt)] = (
+            self.escalations.get(int(final_attempt), 0) + 1
+        )
+
+    @property
+    def mean_confidence(self) -> float:
+        return self.confidence_sum / self.frames if self.frames else 0.0
+
+    @property
+    def mean_bits(self) -> float:
+        """Mean entropy bill per emitted frame (retry overhead axis)."""
+        return self.total_bits / self.frames if self.frames else 0.0
+
+    @property
+    def retry_rate(self) -> float:
+        return self.retries / self.frames if self.frames else 0.0
+
+    def merge(self, other: "ReliabilityStats") -> None:
+        self.frames += other.frames
+        self.launches += other.launches
+        self.retries += other.retries
+        self.unreliable += other.unreliable
+        self.slow_launches += other.slow_launches
+        self.total_bits += other.total_bits
+        self.confidence_sum += other.confidence_sum
+        if other.min_confidence is not None:
+            self.min_confidence = (
+                other.min_confidence if self.min_confidence is None
+                else min(self.min_confidence, other.min_confidence)
+            )
+        for k, v in other.escalations.items():
+            self.escalations[k] = self.escalations.get(k, 0) + v
+
+    def as_dict(self) -> Dict[str, float]:
+        """Flat JSON-friendly snapshot for bench emission."""
+        return {
+            "frames": self.frames,
+            "launches": self.launches,
+            "retries": self.retries,
+            "retry_rate": self.retry_rate,
+            "unreliable": self.unreliable,
+            "slow_launches": self.slow_launches,
+            "mean_bits": self.mean_bits,
+            "mean_confidence": self.mean_confidence,
+            "min_confidence": (
+                self.min_confidence if self.min_confidence is not None else 0.0
+            ),
+            "escalations": {str(k): v for k, v in sorted(self.escalations.items())},
+        }

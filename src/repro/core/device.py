@@ -59,6 +59,24 @@ class MemristorParams:
         """
         return self.vth_sigma * float(np.sqrt(1.0 - (1.0 - self.ou_theta) ** 2))
 
+    @property
+    def reads_per_bit(self) -> float:
+        """Switching cycles one encoded stream bit integrates (t_bit / t_switch)."""
+        return self.t_bit / self.t_switch
+
+    @property
+    def read_cv(self) -> float:
+        """Effective cycle-to-cycle CV of one comparator read.
+
+        The V_th trajectory has stationary CV ``vth_sigma / vth_mu`` per
+        switching cycle, but one encoded bit integrates ``reads_per_bit``
+        cycles (paper: < 4 us per bit at ~50 ns switching), so the threshold
+        jitter an individual read sees is attenuated by ``sqrt(reads_per_bit)``.
+        This is the calibrated cycle-to-cycle term of the crossbar
+        :class:`~repro.bayesnet.noise.NoiseModel`.
+        """
+        return (self.vth_sigma / self.vth_mu) / float(np.sqrt(self.reads_per_bit))
+
 
 DEFAULT_PARAMS = MemristorParams()
 

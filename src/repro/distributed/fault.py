@@ -1,6 +1,8 @@
 """Fault tolerance: preemption checkpointing, straggler watch, loss-spike rewind.
 
-Mechanisms (all exercised by tests/train/test_fault.py):
+Mechanisms (all exercised by tests/train/test_fault_ckpt.py; ``StragglerWatch``
+doubles as the bayesnet :class:`~repro.bayesnet.driver.FrameDriver`'s
+launch-latency watchdog):
 
 * ``PreemptionGuard`` -- SIGTERM/SIGINT sets a flag; the train loop checkpoints
   and exits cleanly at the next step boundary (standard TPU preemption flow).

@@ -1,0 +1,253 @@
+"""Confidence signal, retry policy, and the retrying FrameDriver.
+
+* **signal**: hand-computed margin z-scores and Phi values, monotonicity in
+  the accepted count, zero confidence on rejected frames, flip-rate scoring.
+* **driver**: confidence-gated retry escalates n_bits per attempt (lazily
+  compiled, cached), exhausts its budget into a flagged-unreliable frame
+  (never a drop), keeps rid -> frame mapping through the retry queue, and
+  aggregates honest ReliabilityStats; ``retry=None`` stays the legacy driver.
+* **watchdog**: slow dispatches land in ``stats.slow_launches``.
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bayesnet import (
+    FrameDriver,
+    FrameReport,
+    NoiseModel,
+    ReliabilityStats,
+    RetryPolicy,
+    by_name,
+    compile_network,
+    decision_confidence,
+    flip_rate,
+    sample_evidence,
+)
+from repro.bayesnet.reliability import top2_margin_z
+from repro.bayesnet.spec import NetworkSpec, Node
+
+
+def _phi(z):
+    return 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+
+
+# --- the confidence signal ---------------------------------------------------------
+
+def test_margin_z_binary_hand_computed():
+    # p=0.75, acc=100: counts 75/25, z = 50 / sqrt(100) = 5.
+    z = top2_margin_z(np.asarray([[0.75]]), np.asarray([100]))
+    assert z.shape == (1, 1) and z[0, 0] == pytest.approx(5.0)
+    # symmetric in p <-> 1-p
+    z2 = top2_margin_z(np.asarray([[0.25]]), np.asarray([100]))
+    assert z2[0, 0] == pytest.approx(5.0)
+    conf = decision_confidence(np.asarray([[0.75]]), np.asarray([100]))
+    assert conf[0] == pytest.approx(_phi(5.0))
+
+
+def test_margin_z_categorical_hand_computed():
+    # counts 50/30/20: top two are 50 and 30, z = 20 / sqrt(80).
+    post = np.asarray([[[0.5, 0.3, 0.2]]])
+    z = top2_margin_z(post, np.asarray([100]))
+    assert z[0, 0] == pytest.approx(20.0 / math.sqrt(80.0))
+
+
+def test_confidence_min_over_queries_and_zero_acceptance():
+    # two queries: one decisive, one a coin flip -- the flip dominates.
+    post = np.asarray([[0.99, 0.5], [0.99, 0.99]])
+    conf = decision_confidence(post, np.asarray([200, 200]))
+    assert conf[0] == pytest.approx(0.5)
+    assert conf[1] > 0.99
+    # rejected frame: confidence exactly 0, whatever the fallback posterior
+    conf0 = decision_confidence(np.asarray([[0.5, 0.5]]), np.asarray([0]))
+    assert conf0[0] == 0.0
+
+
+def test_confidence_monotone_in_accepted_count():
+    post = np.asarray([[0.7]])
+    c = [decision_confidence(post, np.asarray([a]))[0] for a in (10, 100, 1000)]
+    assert c[0] < c[1] < c[2]
+
+
+def test_flip_rate():
+    a = np.asarray([[0, 1], [1, 0]])
+    assert flip_rate(a, a) == 0.0
+    assert flip_rate(a, 1 - a) == 1.0
+    assert flip_rate(a, np.asarray([[0, 1], [1, 1]])) == pytest.approx(0.25)
+    with pytest.raises(ValueError):
+        flip_rate(a, np.asarray([[0, 1]]))
+
+
+def test_retry_policy_validation_and_escalation_ladder():
+    with pytest.raises(ValueError):
+        RetryPolicy(min_confidence=1.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(escalation=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_n_bits=100)   # not a multiple of 32
+    pol = RetryPolicy(escalation=4, max_n_bits=1024)
+    assert [pol.n_bits_for(128, a) for a in range(4)] == [128, 512, 1024, 1024]
+
+
+def test_stats_record_and_merge():
+    a, b = ReliabilityStats(), ReliabilityStats()
+    a.record_frame(0.95, final_attempt=0, total_bits=128, reliable=True)
+    b.record_frame(0.60, final_attempt=2, total_bits=896, reliable=False)
+    b.slow_launches = 1
+    a.merge(b)
+    assert a.frames == 2 and a.retries == 2 and a.unreliable == 1
+    assert a.escalations == {0: 1, 2: 1}
+    assert a.min_confidence == pytest.approx(0.60)
+    assert a.mean_bits == pytest.approx(512.0)
+    assert a.slow_launches == 1
+    d = a.as_dict()
+    assert d["frames"] == 2 and d["escalations"] == {"0": 1, "2": 1}
+
+
+# --- the retrying driver -----------------------------------------------------------
+
+# A relay network whose decision is pinned by the evidence: P(out=1 | in) is
+# 0.02 / 0.98, so any surviving posterior must sit on its frame's side of 0.5
+# -- which proves rid -> frame mapping survives the retry queues.
+_RELAY = NetworkSpec(
+    "relay",
+    nodes=(Node("in", cpt=(0.5,)), Node("out", parents=("in",), cpt=(0.02, 0.98))),
+    evidence=("in",), queries=("out",),
+)
+
+# A coin network: the query is a fair coin independent of the evidence, so
+# confidence hovers near Phi(|z|) of a null margin and never reaches 1.0 --
+# the deterministic way to exhaust any retry budget.
+_COIN = NetworkSpec(
+    "coin",
+    nodes=(Node("flag", cpt=(0.5,)), Node("coin", parents=("flag",), cpt=(0.5, 0.5))),
+    evidence=("flag",), queries=("coin",),
+)
+
+# Relay + coin: the coin query keeps the min-over-queries confidence low (so
+# retries actually fire), while the relay query stays decisively mapped to
+# its evidence frame through every escalation.
+_RELAY_COIN = NetworkSpec(
+    "relay-coin",
+    nodes=(Node("in", cpt=(0.5,)),
+           Node("out", parents=("in",), cpt=(0.02, 0.98)),
+           Node("coin", cpt=(0.5,))),
+    evidence=("in",), queries=("out", "coin"),
+)
+
+
+def test_retry_none_is_the_legacy_driver():
+    net = compile_network(_RELAY, n_bits=256)
+    d = FrameDriver(net, max_batch=8, salt=0)
+    d.submit(np.zeros((4, 1), np.int32))
+    out = d.drain()
+    assert len(out) == 4
+    assert d.reports == {} and d.stats.frames == 0
+    assert d.pending_retries == 0
+
+
+def test_retry_escalates_caches_nets_and_keeps_rid_mapping():
+    net = compile_network(_RELAY_COIN, n_bits=64, noise=NoiseModel())
+    pol = RetryPolicy(min_confidence=0.7, max_retries=3, escalation=4)
+    d = FrameDriver(net, max_batch=8, salt=0, retry=pol)
+    ev = np.asarray([[0], [1]] * 8, np.int32)
+    rids = d.submit(ev)
+    out = d.drain()
+    assert sorted(out) == sorted(rids)
+    for rid in rids:
+        post, acc = out[rid]
+        rep = d.reports[rid]
+        assert isinstance(rep, FrameReport)
+        assert 1 <= rep.attempts <= pol.max_retries + 1
+        assert rep.n_bits == pol.n_bits_for(64, rep.attempts - 1)
+        assert rep.total_bits == sum(
+            pol.n_bits_for(64, a) for a in range(rep.attempts)
+        )
+        if rep.reliable:
+            assert rep.confidence >= pol.min_confidence
+            # the relay decision must match the frame that owns this rid
+            assert (post[0] > 0.5) == bool(ev[rid, 0])
+    # every compiled attempt level obeys the ladder
+    for a, n in d._nets.items():
+        assert n.n_bits == pol.n_bits_for(64, a)
+    assert len(d._nets) > 1          # something actually escalated
+    assert d.stats.frames == len(rids)
+    assert sum(d.stats.escalations.values()) == len(rids)
+    assert d.stats.retries == sum(r.attempts - 1 for r in d.reports.values())
+
+
+def test_budget_exhaustion_degrades_gracefully():
+    net = compile_network(_COIN, n_bits=64)
+    pol = RetryPolicy(min_confidence=1.0, max_retries=2, escalation=1)
+    d = FrameDriver(net, max_batch=8, salt=0, retry=pol)
+    rids = d.submit(np.zeros((6, 1), np.int32))
+    out = d.drain()
+    assert sorted(out) == sorted(rids)            # emitted, never dropped
+    for rid in rids:
+        rep = d.reports[rid]
+        assert rep.attempts == pol.max_retries + 1
+        assert not rep.reliable
+    assert d.stats.unreliable == 6
+    assert d.stats.escalations == {pol.max_retries: 6}
+
+
+def test_drain_async_with_retry_completes():
+    net = compile_network(_RELAY_COIN, n_bits=64, noise=NoiseModel())
+    pol = RetryPolicy(min_confidence=0.7, max_retries=2, escalation=4)
+    d = FrameDriver(net, max_batch=8, salt=0, retry=pol)
+    rids = d.submit(np.asarray([[0], [1]] * 4, np.int32))
+    out = d.drain_async()
+    assert sorted(out) == sorted(rids)
+    assert d.pending == d.pending_retries == d.in_flight == 0
+    assert d.stats.frames == len(rids)
+
+
+def test_retry_reduces_low_confidence_fraction():
+    """The acceptance property in miniature: at matched base n_bits, the
+    retrying driver emits fewer under-threshold frames than no-retry."""
+    spec = by_name("lane-change")
+    ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(3), 64))
+    net = compile_network(spec, n_bits=128, noise=NoiseModel())
+    pol = RetryPolicy(min_confidence=0.9, max_retries=3, escalation=4)
+
+    def low_fraction(retry):
+        d = FrameDriver(net, max_batch=32, salt=0, retry=retry)
+        d.submit(ev)
+        out = d.drain()
+        post = np.stack([out[r][0] for r in sorted(out)])
+        acc = np.asarray([out[r][1] for r in sorted(out)])
+        return float(np.mean(decision_confidence(post, acc) < 0.9))
+
+    frac_no_retry = low_fraction(None)
+    frac_retry = low_fraction(pol)
+    assert frac_no_retry > 0.05                  # the gate has work to do
+    assert frac_retry < frac_no_retry
+
+
+def test_watchdog_flags_slow_dispatches():
+    class AlwaysSlow:
+        def step_start(self):
+            pass
+
+        def step_end(self, step):
+            return True
+
+    net = compile_network(_RELAY, n_bits=64)
+    d = FrameDriver(net, max_batch=4, salt=0, watchdog=AlwaysSlow())
+    d.submit(np.zeros((8, 1), np.int32))
+    d.drain()
+    assert d.stats.launches == 2
+    assert d.stats.slow_launches == 2
+
+
+def test_watchdog_default_quiet_on_uniform_launches():
+    net = compile_network(_RELAY, n_bits=64)
+    d = FrameDriver(net, max_batch=4, salt=0)
+    d.submit(np.zeros((4, 1), np.int32))
+    d.drain()
+    assert d.stats.slow_launches == 0

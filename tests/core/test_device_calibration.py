@@ -1,0 +1,71 @@
+"""Device-model calibration surface: the derived read statistics, custom
+parameter sets flowing through every simulator entry point, and the
+degenerate inputs :func:`repro.core.device.fit_ou` must survive.
+
+Complements test_device_sne.py (which checks DEFAULT_PARAMS statistics);
+the crossbar :class:`~repro.bayesnet.noise.NoiseModel` tie itself is pinned
+in tests/bayesnet/test_noise.py.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import device
+
+
+def test_reads_per_bit_and_read_cv_formulas():
+    p = device.DEFAULT_PARAMS
+    assert p.reads_per_bit == pytest.approx(p.t_bit / p.t_switch) == pytest.approx(80.0)
+    assert p.read_cv == pytest.approx(
+        (p.vth_sigma / p.vth_mu) / np.sqrt(p.reads_per_bit)
+    )
+    # integration over ~80 cycles attenuates well below the per-cycle CV
+    assert p.read_cv < p.vth_sigma / p.vth_mu / 8
+    # derived quantities track the base constants
+    fast = dataclasses.replace(p, t_bit=p.t_switch)
+    assert fast.reads_per_bit == pytest.approx(1.0)
+    assert fast.read_cv == pytest.approx(p.vth_sigma / p.vth_mu)
+
+
+def test_sample_devices_custom_params():
+    custom = dataclasses.replace(device.DEFAULT_PARAMS, vth_mu=1.5, d2d_cv=0.2)
+    mus = np.asarray(device.sample_devices(jax.random.PRNGKey(0), 4000, custom))
+    assert abs(mus.mean() - 1.5) < 0.02
+    assert abs(mus.std() / mus.mean() - 0.2) < 0.02
+
+
+def test_fit_ou_custom_theta_roundtrip():
+    custom = dataclasses.replace(device.DEFAULT_PARAMS, ou_theta=0.6)
+    path = np.asarray(device.sample_ou_path(jax.random.PRNGKey(1), 50000, custom))
+    theta, mu, sigma_w = device.fit_ou(path)
+    assert abs(theta - 0.6) < 0.05
+    assert abs(mu - custom.vth_mu) < 0.02
+    assert abs(sigma_w - custom.ou_sigma_w) < 0.02
+
+
+def test_fit_ou_random_walk_falls_back_to_sample_mean():
+    # theta ~ 0 (pure random walk): the mu = a / theta division is guarded.
+    rng = np.random.default_rng(0)
+    path = np.cumsum(rng.normal(0.0, 1e-3, 10000)) + 2.0
+    theta, mu, sigma_w = device.fit_ou(path)
+    assert abs(theta) < 0.05
+    assert np.isfinite(mu) and np.isfinite(sigma_w)
+
+
+def test_endurance_trace_shapes_and_ratio():
+    custom = dataclasses.replace(device.DEFAULT_PARAMS, switching_ratio=1e4)
+    hrs, lrs = device.endurance_trace(jax.random.PRNGKey(2), 512, custom)
+    assert hrs.shape == lrs.shape == (512,)
+    assert np.all(np.asarray(lrs) > 0)
+    ratio = float(np.asarray(hrs).mean() / np.asarray(lrs).mean())
+    assert 3e3 < ratio < 3e4                     # tracks the custom ratio
+
+
+def test_switching_event_saturates():
+    ones = np.asarray(device.switching_event(jax.random.PRNGKey(3), 10.0, 256))
+    zeros = np.asarray(device.switching_event(jax.random.PRNGKey(3), 0.0, 256))
+    assert ones.dtype == np.uint8 and ones.shape == (256,)
+    assert ones.all() and not zeros.any()
