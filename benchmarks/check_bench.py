@@ -1,6 +1,6 @@
 """Bench-smoke regression gates over a freshly written ``BENCH_*.json``.
 
-Five gates:
+Six gates:
 
 * **Independent-entropy cliff**: per-frame joint samples (the production
   mode, what the physical memristor array provides for free) must stay within
@@ -36,6 +36,12 @@ Five gates:
   a budget artefact), with the retry bit overhead (mean bits / base bits)
   under ``MAX_RETRY_OVERHEAD``.  The sweep is fully seeded, so the committed
   values reproduce bit-for-bit on a fixed jax/CPU stack.
+* **Latency budget**: every ``latency.frame_decide_*`` row (single-frame
+  fused decide, all samples retained) must hold the paper's 0.4 ms budget at
+  the median (p50 <= 400 us, no fudge -- committed p50s run 50-95 us) and at
+  the tail within a documented container multiplier
+  (p99 <= 400 us x ``LATENCY_BUDGET_MULT``; see the constant's comment for
+  why a shared 2-vCPU container cannot gate a raw sub-millisecond p99).
 
 Usage: ``python benchmarks/check_bench.py BENCH_<ts>.json [baseline.json]``
 (CI runs it right after the bench-smoke step writes the snapshot), or call
@@ -60,7 +66,18 @@ import sys
 # catching any return of the cliff.
 MAX_INDEP_RATIO = 24.0
 # Fail when a scenario's frames/s drops more than 30% vs the committed
-# snapshot: new_us > old_us / 0.7.
+# snapshot: new_us > old_us / 0.7.  Baselines only mean anything on a
+# like-for-like host: the container behind this repo was downsized from
+# 2 vCPUs to 1 on 2026-08-07 (os.cpu_count() 2 -> 1; a git-stash
+# experiment confirmed the *committed* code re-measures identically to
+# the working tree, so the shift is hardware, not code).  The small
+# multi-threaded shared-entropy launches lose the ~1.8x two-core speedup
+# the morning re-calibration note below records (intersection and
+# obstacle-class shared rows ~1.4x slower) while the single-core-bound
+# fused rows move <~6%, so the snapshot landed with the telemetry PR
+# re-baselines the trajectory on the 1-vCPU host.  When this gate fails
+# on threading-sensitive rows with no plausible code cause, check the
+# host before checking the diff.
 MAX_FPS_REGRESSION = 0.30
 # The in-kernel decide epilogue is a register-level argmax; 1.3x absorbs
 # shared-tenant noise while still catching a structurally broken fusion
@@ -72,6 +89,19 @@ MAX_NOMINAL_FLIP = 0.15
 # Confidence-gated retry's mean per-frame bit bill over the base stream
 # length: committed rows run 3.5-6x (min_confidence=0.9, escalation=4).
 MAX_RETRY_OVERHEAD = 8.0
+# The paper's timeliness claim per decision: 0.4 ms (>= 2,500 fps).
+PAPER_BUDGET_US = 400.0
+# p99 container multiplier.  The budget genuinely holds on this stack -- the
+# committed frame_decide rows show min 45-63 us and p50 50-95 us, 4-8x inside
+# 0.4 ms -- but this repo's CI shares 2-vCPU gVisor containers whose scheduler
+# preempts the bench process for multi-millisecond stalls: measured p99 runs
+# 2.6-4.1 ms against a 45 us min, a ~60x spread that is entirely scheduler
+# occupancy, not code.  20x bounds the p99 at 8 ms: above any stall observed
+# on these containers, far below what a structural regression produces (the
+# decide path falling out of fusion or back to interpret-mode kernels costs
+# 100x+, and the strict p50 arm catches anything sustained).  On quiet
+# hardware set REPRO_LATENCY_MULT=1 to gate the paper budget directly.
+LATENCY_BUDGET_MULT = 20.0
 _SHARED = "bayesnet_pedestrian-night_batch1024"
 _INDEP = "bayesnet_pedestrian-night_indep_batch1024"
 
@@ -261,12 +291,54 @@ def check_retry(data: dict, path: str) -> None:
         )
 
 
+def check_latency_budget(data: dict, path: str) -> None:
+    """Gate the single-frame decide distribution against the 0.4 ms budget.
+
+    Two arms per ``latency.frame_decide_*`` row: p50 must clear the budget
+    itself (the honest "paper claim holds on commodity CPU" check -- the
+    median is robust to the isolated scheduler stalls that poison a
+    shared-container tail), p99 must clear budget x the documented
+    ``LATENCY_BUDGET_MULT`` (overridable via ``REPRO_LATENCY_MULT`` for
+    quiet hardware).  Percentiles are read from the structured ``p50_us`` /
+    ``p99_us`` fields that every Timing-emitted row carries.
+    """
+    rows = sorted(k for k in data if k.startswith("latency.frame_decide_"))
+    if not rows:
+        print("latency-budget gate: no frame_decide rows, skipping")
+        return
+    mult = float(os.environ.get("REPRO_LATENCY_MULT", LATENCY_BUDGET_MULT))
+    limit_p99 = PAPER_BUDGET_US * mult
+    failed = []
+    for row in rows:
+        r = data[row]
+        if "p50_us" not in r or "p99_us" not in r:
+            print(f"latency-budget gate: {row} has no percentile fields, skipping")
+            continue
+        p50, p99 = float(r["p50_us"]), float(r["p99_us"])
+        bad = p50 > PAPER_BUDGET_US or p99 > limit_p99
+        status = "FAIL" if bad else "ok"
+        print(
+            f"latency-budget gate [{status}]: {row}: p50 {p50:,.0f} us "
+            f"(paper budget {PAPER_BUDGET_US:.0f} us) | p99 {p99:,.0f} us "
+            f"(limit {limit_p99:,.0f} us = budget x {mult:g} container mult)"
+        )
+        if bad:
+            failed.append(row)
+    if failed:
+        raise SystemExit(
+            f"single-frame decide latency broke the paper budget "
+            f"(p50 > {PAPER_BUDGET_US:.0f} us or p99 > {limit_p99:,.0f} us) "
+            f"for {failed} in {path}"
+        )
+
+
 def check(path: str, baseline: str | None = None) -> None:
     data = _load(path)
     check_indep_ratio(data, path)
     check_decide_overhead(data, path)
     check_nominal_flip(data, path)
     check_retry(data, path)
+    check_latency_budget(data, path)
     check_regression(data, path, baseline)
 
 

@@ -1,6 +1,14 @@
 """Shared benchmark helpers: timing + CSV emission (name,us_per_call,derived)
 plus machine-readable JSON snapshots (BENCH_<timestamp>.json) for the perf
-trajectory."""
+trajectory.
+
+``timeit`` / ``timeit_pair`` return :class:`Timing` -- a ``float`` subclass
+carrying the raw per-iteration samples -- so every timed BENCH row records
+``p50_us`` / ``p99_us`` next to the gate statistic.  The min/median the gates
+compare is bit-for-bit the float it always was (``Timing`` IS that float);
+the percentiles ride along for the latency-budget gate and for humans who
+want to see the tail, not just the floor.
+"""
 
 from __future__ import annotations
 
@@ -11,12 +19,48 @@ from typing import Callable
 
 import jax
 
+from repro.obs.histogram import percentile
+
 ROWS = []
+
+
+class Timing(float):
+    """Per-call microseconds that remember their per-iteration samples.
+
+    Arithmetic, comparison, and formatting behave exactly like the bare
+    float (the chosen ``stat``), so existing gate code and derived-string
+    ratios are untouched; ``samples_us`` / ``p50`` / ``p99`` expose the
+    retained distribution.
+    """
+
+    def __new__(cls, value_us: float, samples_us=()):
+        t = super().__new__(cls, value_us)
+        t.samples_us = tuple(samples_us)
+        return t
+
+    def pct(self, q: float) -> float:
+        return percentile(self.samples_us, q)
+
+    @property
+    def p50(self) -> float:
+        return self.pct(50.0)
+
+    @property
+    def p90(self) -> float:
+        return self.pct(90.0)
+
+    @property
+    def p99(self) -> float:
+        return self.pct(99.0)
+
+
+def _pick(times_sorted, stat: str) -> float:
+    return times_sorted[0] if stat == "min" else times_sorted[len(times_sorted) // 2]
 
 
 def timeit(
     fn: Callable, *args, warmup: int = 1, iters: int = 5, stat: str = "median"
-) -> float:
+) -> Timing:
     """Wall-time per call in microseconds (jax arrays blocked).
 
     ``stat='median'`` is the default; ``stat='min'`` reports the fastest
@@ -25,7 +69,9 @@ def timeit(
     slow, which poisons a small-sample median but never the min).  The
     regression-gated bayesnet rows AND the seed-speedup latency rows
     (``bench_latency``) use it so CI compares machine capability, not
-    scheduler luck.
+    scheduler luck.  The returned :class:`Timing` additionally carries every
+    per-iteration sample, so rows emitted from it get ``p50_us``/``p99_us``
+    fields for free.
     """
     for _ in range(warmup):
         out = fn(*args)
@@ -37,7 +83,7 @@ def timeit(
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     times.sort()
-    return (times[0] if stat == "min" else times[len(times) // 2]) * 1e6
+    return Timing(_pick(times, stat) * 1e6, [t * 1e6 for t in times])
 
 
 def timeit_pair(
@@ -65,15 +111,24 @@ def timeit_pair(
         tb.append(time.perf_counter() - t0)
     ta.sort()
     tb.sort()
-    pick = (lambda t: t[0]) if stat == "min" else (lambda t: t[len(t) // 2])
-    return pick(ta) * 1e6, pick(tb) * 1e6
+    return (
+        Timing(_pick(ta, stat) * 1e6, [t * 1e6 for t in ta]),
+        Timing(_pick(tb, stat) * 1e6, [t * 1e6 for t in tb]),
+    )
 
 
 def emit(name: str, us_per_call: float, derived: str, extra: dict | None = None):
     """Record one bench row.  ``extra`` merges additional *numeric* fields
     into the row's JSON record (e.g. ``decide_overhead``) so gates can read
-    them structurally instead of parsing the human-readable derived string."""
-    ROWS.append((name, us_per_call, derived, extra or {}))
+    them structurally instead of parsing the human-readable derived string.
+    A :class:`Timing` value contributes ``p50_us``/``p99_us``/``n_samples``
+    automatically (explicit ``extra`` keys win)."""
+    extra = dict(extra or {})
+    if isinstance(us_per_call, Timing) and us_per_call.samples_us:
+        extra.setdefault("p50_us", round(us_per_call.p50, 3))
+        extra.setdefault("p99_us", round(us_per_call.p99, 3))
+        extra.setdefault("n_samples", len(us_per_call.samples_us))
+    ROWS.append((name, float(us_per_call), derived, extra))
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
@@ -82,7 +137,7 @@ def write_json(out_dir: str = ".") -> str:
 
     Schema: {name: {"us_per_call": float, "derived": str}} plus a "_meta"
     record (timestamp, jax backend/version) so runs are comparable across the
-    perf trajectory.
+    perf trajectory.  Timed rows additionally carry "p50_us"/"p99_us".
     """
     os.makedirs(out_dir, exist_ok=True)
     stamp = time.strftime("%Y%m%d_%H%M%S")

@@ -68,6 +68,43 @@ from repro.distributed import context as dist_context
 from repro.distributed import sharding as dist_sharding
 from repro.kernels.net_sweep import SweepPlan, net_sweep
 from repro.kernels.node_mux.ops import node_mux, node_mux_categorical
+from repro.obs import Tracer
+
+
+def network_stats(net: "CompiledNetwork") -> dict:
+    """Static plan statistics for one compiled program (span / log fodder).
+
+    * ``n_nodes`` / ``n_edges``: DAG shape.
+    * ``cpt_rows``: total CPT rows lowered (one per parent assignment per
+      node) -- the crossbar row count of the modelled array.
+    * ``n_thresholds``: total 8-bit DAC comparator thresholds
+      (``rows x (card - 1)`` per node), the quantity the noise model perturbs.
+    * ``threshold_mask_bytes``: size of the trace-time-folded comparator
+      constants in the fused sweep -- each threshold contributes 8 bit-plane
+      mask words of 4 bytes (:mod:`repro.kernels.net_sweep`'s borrow-chain
+      literals), so this is the plan's constant footprint, the number that
+      grows when a network deepens.
+    * ``n_value_slots``: numerator count slots (``card - 1`` per query).
+    """
+    spec = net.spec
+    n_edges = n_rows = n_thresholds = 0
+    for name in spec.topo_order():
+        node = spec.node(name)
+        rows = spec.cpt_rows(name)
+        n_edges += len(node.parents)
+        n_rows += len(rows)
+        n_thresholds += len(rows) * (spec.card(name) - 1)
+    return {
+        "n_nodes": spec.n_nodes,
+        "n_edges": n_edges,
+        "cpt_rows": n_rows,
+        "n_thresholds": n_thresholds,
+        "threshold_mask_bytes": n_thresholds * 8 * 4,
+        "n_value_slots": sum(c - 1 for c in net.query_cards),
+        "n_bits": net.n_bits,
+        "fused": net.fused,
+        "n_shards": net.n_shards,
+    }
 
 
 def _posterior_from_counts(numer: jnp.ndarray, denom: jnp.ndarray) -> jnp.ndarray:
@@ -399,6 +436,7 @@ def compile_network(
     devices: int | None = None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
+    trace: Tracer | None = None,
 ) -> CompiledNetwork:
     """Lower ``spec`` to a jitted, frame-batched packed-stochastic program.
 
@@ -425,7 +463,25 @@ def compile_network(
     physical array scales, and costs nothing in reproducibility.  Batches the
     shard count does not divide transparently fall back to the single-device
     launch (the jit is specialised per batch shape anyway).
+
+    ``trace`` (a :class:`~repro.obs.Tracer`) records the lowering as a
+    ``compile_network`` span whose attrs carry the plan statistics of
+    :func:`network_stats` (nodes, edges, CPT rows, DAC thresholds,
+    threshold-mask bytes, value slots).  The span's duration is the
+    *lowering* time -- plan construction + jit wrapper building; XLA
+    compilation itself is lazy and shows up inside the first launch's
+    ``dispatch`` span instead.  ``trace=None`` changes nothing.
     """
+    if trace is not None:
+        with trace.span("compile_network", network=spec.name, n_bits=n_bits) as sp:
+            net = compile_network(
+                spec, n_bits, queries, evidence, share_entropy=share_entropy,
+                estimator=estimator, fused=fused, mux_mode=mux_mode,
+                noise=noise, devices=devices, use_kernel=use_kernel,
+                interpret=interpret,
+            )
+            sp.attrs.update(network_stats(net))
+            return net
     queries = tuple(queries if queries is not None else spec.queries)
     evidence = tuple(evidence if evidence is not None else spec.evidence)
     if not queries:

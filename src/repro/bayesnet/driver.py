@@ -61,11 +61,31 @@ the running mean -- a recompile for a new bucket shape, a contended device,
 host-side stalls -- are counted in ``stats.slow_launches``.  Under async
 dispatch the wall time covers trace/compile + enqueue, which is exactly the
 host-side latency a serving deployment cares about.
+
+**Telemetry.**  ``trace=Tracer()`` / ``metrics=MetricsRegistry()``
+(:mod:`repro.obs`) light up the whole serving path with zero behaviour
+change -- the traced driver's posteriors are bit-identical to the untraced
+one's (a regression-tested property, like the <=5% overhead bound).  Each
+launch becomes a span tree honouring jax's async dispatch: a ``launch[n]``
+parent span from dispatch to harvest, ``pack`` and ``dispatch`` sync child
+spans for the host-side work, a ``device`` child opened when the dispatch
+call returns and closed only when :meth:`harvest` first blocks on the result
+(overlapping ``device`` spans in the exported trace ARE the async pipeline),
+and a ``harvest`` child for host-side conversion + confidence gating.
+Retried frames get ``retry[rid]`` spans nested under the launch that flagged
+them, covering the wait until their re-launch's verdict.  The registry
+counts frames in/out, launches, per-bucket launch shapes, padded lanes,
+retry attempts per rung, flagged-unreliable emissions, escalated-plan cache
+hits/misses, and entropy words generated, and feeds ``frame_ms`` (enqueue ->
+emit, annotated with the paper's 0.4 ms budget) and ``launch_ms``
+(dispatch -> harvest) histograms; the watchdog writes into the same registry.
+``trace=None`` (default) leaves every hot path untouched.
 """
 
 from __future__ import annotations
 
 import itertools
+import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -80,6 +100,7 @@ from repro.bayesnet.reliability import (
     decision_confidence,
 )
 from repro.distributed.fault import StragglerWatch
+from repro.obs import PAPER_BUDGET_MS, MetricsRegistry, Tracer
 
 # Process-wide source of default driver salts (one per construction).
 _DRIVER_IDS = itertools.count()
@@ -94,6 +115,8 @@ class FrameDriver:
         salt: int | None = None,
         retry: RetryPolicy | None = None,
         watchdog: StragglerWatch | None = None,
+        trace: Tracer | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -111,15 +134,26 @@ class FrameDriver:
         self._dispatches = 0
         # dispatched-but-unharvested launches, in dispatch order:
         # (ticket, taken (rid, row, attempt, bits_before) tuples,
-        #  attempt level, device posteriors, device accepted counts)
+        #  attempt level, device posteriors, device accepted counts,
+        #  launch span id | None, device span id | None,
+        #  dispatch wall-clock | None)
         self._inflight: deque = deque()
         self.last_launch_shape: Optional[Tuple[int, int]] = None
+        # --- telemetry (inert when both are None) ---
+        self.trace = trace
+        if metrics is None and trace is not None:
+            metrics = MetricsRegistry()   # spans without counters are half a story
+        self.metrics = metrics
+        self._t_submit: Dict[int, float] = {}     # rid -> enqueue wall-clock
+        self._retry_spans: Dict[int, int] = {}    # rid -> open retry span id
         # --- reliability layer (inert when retry is None) ---
         self._nets: Dict[int, CompiledNetwork] = {0: net}
         self._retry_q: deque = deque()   # (rid, row, attempt, bits_before)
         self.reports: Dict[int, FrameReport] = {}
         self.stats = ReliabilityStats()
-        self.watch = watchdog if watchdog is not None else StragglerWatch()
+        self.watch = (
+            watchdog if watchdog is not None else StragglerWatch(metrics=metrics)
+        )
 
     # ------------------------------------------------------------- admission
     def submit(self, frames) -> List[int]:
@@ -134,6 +168,14 @@ class FrameDriver:
             self._next_rid += 1
             self._queue.append((rid, row))
             rids.append(rid)
+        if self.metrics is not None:
+            now = time.perf_counter()
+            for rid in rids:
+                self._t_submit[rid] = now
+            self.metrics.inc("frames_in", len(rids))
+            self.metrics.set_gauge("pending", len(self._queue))
+        if self.trace is not None:
+            self.trace.event("submit", n=len(rids))
         return rids
 
     @property
@@ -179,37 +221,81 @@ class FrameDriver:
         entropy mode, noise model) on a single device -- retry batches are
         short tails, not the place for shard_map.
         """
-        if attempt not in self._nets:
+        cached = attempt in self._nets
+        if self.metrics is not None:
+            self.metrics.inc("plan_cache_hits" if cached else "plan_cache_misses")
+        if not cached:
             assert self.retry is not None
             n_bits = self.retry.n_bits_for(self.net.n_bits, attempt)
             self._nets[attempt] = compile_network(
                 self.net.spec, n_bits, self.net.queries, self.net.evidence,
                 share_entropy=self.net.share_entropy,
                 estimator=self.net.estimator, fused=self.net.fused,
-                noise=self.net.noise, devices=1,
+                noise=self.net.noise, devices=1, trace=self.trace,
             )
         return self._nets[attempt]
 
-    def _launch(self, key: jax.Array | None, taken: list, attempt: int) -> int:
-        """Pack one batch at one attempt level, launch it, park the results."""
-        if key is None:
-            key = self._next_key()
+    def _pack(self, taken: list) -> Tuple[np.ndarray, int]:
+        """Stack the taken frames and pad up to their power-of-two bucket."""
         ev = np.stack([row for _, row, _, _ in taken])
         n_real = ev.shape[0]
         bucket = self._bucket(n_real)
         if n_real < bucket:
             pad = np.repeat(ev[-1:], bucket - n_real, axis=0)
             ev = np.concatenate([ev, pad], axis=0)
+        return ev, n_real
+
+    def _launch(self, key: jax.Array | None, taken: list, attempt: int) -> int:
+        """Pack one batch at one attempt level, launch it, park the results."""
+        tr, mx = self.trace, self.metrics
+        lspan = dspan = t_dispatch = None
+        if tr is not None:
+            lspan = tr.begin(
+                f"launch[{self._dispatches}]", track="launch",
+                attempt=attempt, n_real=len(taken),
+            )
+        if key is None:
+            key = self._next_key()
+        if tr is not None:
+            with tr.span("pack", parent=lspan):
+                ev, n_real = self._pack(taken)
+        else:
+            ev, n_real = self._pack(taken)
         self.last_launch_shape = ev.shape
         net = self.net if attempt == 0 else self._net_for(attempt)
+        if mx is not None:
+            t_dispatch = time.perf_counter()
         self.watch.step_start()
-        post, accepted = net.run(key, ev)
+        if tr is not None:
+            # host-side dispatch only: under async dispatch net.run returns
+            # as soon as the work is enqueued, so this span is trace/compile
+            # lookup + enqueue -- the device interval is the `device` span
+            with tr.span("dispatch", parent=lspan, bucket=ev.shape[0]):
+                post, accepted = net.run(key, ev)
+        else:
+            post, accepted = net.run(key, ev)
         ticket = self._dispatches
         self._dispatches += 1
         if self.watch.step_end(ticket):
             self.stats.slow_launches += 1
         self.stats.launches += 1
-        self._inflight.append((ticket, taken, attempt, post, accepted))
+        if tr is not None:
+            dspan = tr.begin("device", parent=lspan, track="device", ticket=ticket)
+        if mx is not None:
+            mx.inc("launches")
+            mx.inc(f"bucket_{ev.shape[0]}")
+            mx.inc("padded_lanes", ev.shape[0] - n_real)
+            mx.inc(
+                "entropy_words",
+                ev.shape[0] * (net.n_bits // 32) * net.spec.n_nodes,
+            )
+            if attempt > 0:
+                mx.inc(f"retry_launches_attempt_{attempt}")
+            mx.set_gauge("in_flight", len(self._inflight) + 1)
+            mx.set_gauge("pending", len(self._queue))
+        self._inflight.append(
+            (ticket, taken, attempt, post, accepted, lspan, dspan, t_dispatch)
+        )
         return ticket
 
     def _dispatch(self, key: jax.Array | None) -> int:
@@ -249,28 +335,77 @@ class FrameDriver:
         ``stats``.
         """
         out: Dict[int, Tuple[np.ndarray, int]] = {}
+        tr, mx = self.trace, self.metrics
         while self._inflight:
-            _, taken, attempt, post, accepted = self._inflight.popleft()
+            ticket, taken, attempt, post, accepted, lspan, dspan, t_disp = (
+                self._inflight.popleft()
+            )
+            hspan = None
+            if tr is not None:
+                hspan = tr.begin("harvest", parent=lspan, ticket=ticket)
             post, accepted = np.asarray(post), np.asarray(accepted)
+            if tr is not None:
+                # first observable point at which this launch's device work
+                # is complete: the host just blocked on its arrays
+                tr.end(dspan)
+            t_now = time.perf_counter() if mx is not None else None
+            emitted: List[int] = []
             if self.retry is None:
                 for i, (rid, _, _, _) in enumerate(taken):
                     out[rid] = (post[i], int(accepted[i]))
-                continue
-            n_real = len(taken)
-            conf = decision_confidence(post[:n_real], accepted[:n_real])
-            n_bits = (self.net if attempt == 0 else self._nets[attempt]).n_bits
-            for i, (rid, row, _, bits_before) in enumerate(taken):
-                total = bits_before + n_bits
-                ok = bool(conf[i] >= self.retry.min_confidence)
-                if not ok and attempt < self.retry.max_retries:
-                    self._retry_q.append((rid, row, attempt + 1, total))
-                    continue
-                out[rid] = (post[i], int(accepted[i]))
-                self.reports[rid] = FrameReport(
-                    confidence=float(conf[i]), attempts=attempt + 1,
-                    n_bits=n_bits, total_bits=total, reliable=ok,
-                )
-                self.stats.record_frame(float(conf[i]), attempt, total, ok)
+                    emitted.append(rid)
+            else:
+                n_real = len(taken)
+                conf = decision_confidence(post[:n_real], accepted[:n_real])
+                n_bits = (self.net if attempt == 0 else self._nets[attempt]).n_bits
+                for i, (rid, row, _, bits_before) in enumerate(taken):
+                    total = bits_before + n_bits
+                    ok = bool(conf[i] >= self.retry.min_confidence)
+                    if tr is not None and rid in self._retry_spans:
+                        # this launch carried the frame's retry attempt: close
+                        # the span opened when it was flagged
+                        tr.end(self._retry_spans.pop(rid), confidence=float(conf[i]))
+                    if not ok and attempt < self.retry.max_retries:
+                        self._retry_q.append((rid, row, attempt + 1, total))
+                        if tr is not None:
+                            self._retry_spans[rid] = tr.begin(
+                                f"retry[{rid}]", parent=lspan, track="retry",
+                                attempt=attempt + 1, confidence=float(conf[i]),
+                            )
+                        if mx is not None:
+                            mx.inc(f"retry_attempt_{attempt + 1}")
+                        continue
+                    out[rid] = (post[i], int(accepted[i]))
+                    emitted.append(rid)
+                    self.reports[rid] = FrameReport(
+                        confidence=float(conf[i]), attempts=attempt + 1,
+                        n_bits=n_bits, total_bits=total, reliable=ok,
+                    )
+                    self.stats.record_frame(float(conf[i]), attempt, total, ok)
+                    if mx is not None and not ok:
+                        mx.inc("flagged_unreliable")
+            if mx is not None:
+                mx.inc("frames_out", len(emitted))
+                if t_disp is not None:
+                    mx.observe(
+                        "launch_ms", (t_now - t_disp) * 1e3,
+                        budget_ms=PAPER_BUDGET_MS,
+                    )
+                # one dict pop per frame (C-speed map, single lookup), with
+                # the arithmetic vectorised: harvest bookkeeping is on the
+                # <=5% overhead budget
+                waits = [
+                    t for t in map(self._t_submit.pop, emitted,
+                                   itertools.repeat(None))
+                    if t is not None
+                ]
+                if waits:
+                    mx.hist("frame_ms", budget_ms=PAPER_BUDGET_MS).observe_many(
+                        (t_now - np.asarray(waits)) * 1e3
+                    )
+            if tr is not None:
+                tr.end(hspan, emitted=len(emitted))
+                tr.end(lspan, ticket=ticket)
         return out
 
     def step(
@@ -293,6 +428,14 @@ class FrameDriver:
         index (launch 0 uses ``key`` itself, so the no-retry case is
         unchanged).
         """
+        if self.trace is None:
+            return self._step_impl(key, block)
+        with self.trace.span("step", block=block):
+            return self._step_impl(key, block)
+
+    def _step_impl(
+        self, key: jax.Array | None, block: bool
+    ) -> Dict[int, Tuple[np.ndarray, int]]:
         if not self._queue and not self._retry_q:
             return self.harvest() if block else {}
         n = 0

@@ -43,9 +43,19 @@ class PreemptionGuard:
 
 
 class StragglerWatch:
-    def __init__(self, threshold: float = 3.0, alpha: float = 0.2):
+    """Wall-time EWMA straggler detector.
+
+    ``metrics`` (a :class:`~repro.obs.metrics.MetricsRegistry`) is optional:
+    when set, every observed interval lands in the ``watch_step_ms``
+    histogram and the ``watch_steps`` / ``watch_slow_steps`` counters, so the
+    watchdog's verdicts are queryable next to the rest of the serving
+    telemetry instead of living only in ``flagged_steps``.
+    """
+
+    def __init__(self, threshold: float = 3.0, alpha: float = 0.2, metrics=None):
         self.threshold = threshold
         self.alpha = alpha
+        self.metrics = metrics
         self.ewma: Optional[float] = None
         self.flagged_steps: list[int] = []
         self._t0: Optional[float] = None
@@ -54,26 +64,35 @@ class StragglerWatch:
         self._t0 = time.monotonic()
 
     def step_end(self, step: int) -> bool:
-        dt = time.monotonic() - (self._t0 or time.monotonic())
-        slow = self.ewma is not None and dt > self.threshold * self.ewma
-        if slow:
-            self.flagged_steps.append(step)
-        # EWMA excludes flagged outliers so one straggler doesn't mask the next
-        if not slow:
-            self.ewma = dt if self.ewma is None else (
-                (1 - self.alpha) * self.ewma + self.alpha * dt
+        # An un-started watch used to measure `now - now` and report a silent
+        # 0.0 -- which then poisoned the EWMA toward zero and flagged every
+        # real step as a straggler.  A missing step_start is a caller bug;
+        # say so instead of fabricating a timing.
+        if self._t0 is None:
+            raise RuntimeError(
+                "StragglerWatch.step_end() without a matching step_start(); "
+                "an un-started watch has no interval to measure"
             )
-        return slow
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        return self.observe(step, dt)
 
     def observe(self, step: int, dt: float) -> bool:
-        """Direct-injection variant for tests."""
+        """Record one interval directly (the timer-free entry point)."""
         slow = self.ewma is not None and dt > self.threshold * self.ewma
         if slow:
             self.flagged_steps.append(step)
         else:
+            # EWMA excludes flagged outliers so one straggler doesn't mask
+            # the next
             self.ewma = dt if self.ewma is None else (
                 (1 - self.alpha) * self.ewma + self.alpha * dt
             )
+        if self.metrics is not None:
+            self.metrics.inc("watch_steps")
+            if slow:
+                self.metrics.inc("watch_slow_steps")
+            self.metrics.observe("watch_step_ms", dt * 1e3)
         return slow
 
 

@@ -1,0 +1,22 @@
+"""Lightweight, zero-dep telemetry for the serving path (DESIGN.md §13).
+
+    trace.py      Tracer / Span -- nested sync spans + async (dispatch-to-
+                  harvest) spans, Chrome/Perfetto JSON export, optional
+                  jax.profiler TraceAnnotation passthrough
+    metrics.py    MetricsRegistry -- counters / gauges / named histograms
+    histogram.py  LatencyHistogram -- log-spaced streaming bins with exact
+                  p50/p90/p99 while samples are retained, and the paper's
+                  0.4 ms budget annotation (PAPER_BUDGET_MS)
+
+Everything is off by default: instrumented layers take ``trace=None`` /
+``metrics=None`` and the untouched path stays bit-identical (regression-
+tested, not assumed).
+"""
+
+from repro.obs.histogram import (  # noqa: F401
+    PAPER_BUDGET_MS,
+    LatencyHistogram,
+    percentile,
+)
+from repro.obs.metrics import MetricsRegistry  # noqa: F401
+from repro.obs.trace import Span, Tracer  # noqa: F401

@@ -48,7 +48,10 @@ class EngineConfig:
 
 
 class ServeEngine:
-    def __init__(self, model_cfg, params, engine_cfg: EngineConfig):
+    def __init__(
+        self, model_cfg, params, engine_cfg: EngineConfig,
+        trace=None, metrics=None,
+    ):
         self.cfg = model_cfg
         self.params = params
         self.ecfg = engine_cfg
@@ -63,6 +66,17 @@ class ServeEngine:
         self.state = None
         self.pos = 0
         self.step_count = 0
+        # optional telemetry (repro.obs); None keeps every path untouched
+        self.trace = trace
+        self.metrics = metrics
+
+    def _gauge_queues(self):
+        """Admission-side visibility: queue depth + slot occupancy gauges."""
+        if self.metrics is not None:
+            self.metrics.set_gauge("pending_depth", len(self.pending))
+            self.metrics.set_gauge(
+                "active_slots", sum(s is not None for s in self.slots)
+            )
 
     # ------------------------------------------------------------- admission
     def add_requests(self, requests: List[Request]):
@@ -75,11 +89,14 @@ class ServeEngine:
         for r in requests:
             r.out_tokens, r.confidences = [], []
             self.pending.append(r)
+        if self.metrics is not None:
+            self.metrics.inc("requests_in", len(requests))
         if self.state is None:
             # before the first prefill, slots can be granted directly -- the
             # caller's prefill_all() encodes them.  Mid-flight, a slot grant
             # must come with a cache refresh, so step() handles admission.
             self._fill_free_slots()
+        self._gauge_queues()
 
     def _fill_free_slots(self) -> bool:
         """Move pending requests into free slots; True if any were admitted."""
@@ -90,6 +107,9 @@ class ServeEngine:
                 r.admit_step = self.step_count
                 self.slots[i] = r
                 admitted = True
+                if self.metrics is not None:
+                    self.metrics.inc("requests_admitted")
+        self._gauge_queues()
         return admitted
 
     def _admit_pending(self):
@@ -122,12 +142,26 @@ class ServeEngine:
     # ---------------------------------------------------------------- serve
     def prefill_all(self):
         batch = self._batch_prompts()
-        logits, self.state = self._prefill(batch)
+        if self.trace is not None:
+            with self.trace.span("engine.prefill", tokens=batch["tokens"].shape[1]):
+                logits, self.state = self._prefill(batch)
+        else:
+            logits, self.state = self._prefill(batch)
         self.pos = batch["tokens"].shape[1]
+        if self.metrics is not None:
+            self.metrics.inc("prefills")
         return logits
 
     def step(self, key, last_logits) -> Dict[int, tuple]:
         """One decode step for all active slots; returns {rid: (token, conf, ok)}."""
+        if self.trace is None:
+            return self._step_impl(key, last_logits)
+        with self.trace.span(
+            "engine.step", step=self.step_count, pending=len(self.pending)
+        ):
+            return self._step_impl(key, last_logits)
+
+    def _step_impl(self, key, last_logits):
         if self.ecfg.bayes_gate:
             # two conditionally-independent posterior sources: the head itself
             # and a temperature-perturbed view (stand-in for MTP/modality heads)
@@ -163,6 +197,11 @@ class ServeEngine:
             if len(s.out_tokens) >= s.max_new_tokens:
                 s.done = True
                 self.slots[i] = None     # free the slot (continuous batching)
+                if self.metrics is not None:
+                    self.metrics.inc("requests_done")
+        if self.metrics is not None:
+            self.metrics.inc("tokens_out", len(out))
+            self._gauge_queues()
         if self.pending and any(s is None for s in self.slots):
             refreshed = self._admit_pending()
             if refreshed is not None:

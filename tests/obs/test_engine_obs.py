@@ -1,0 +1,63 @@
+"""ServeEngine telemetry: admission counters, queue-depth gauges, step spans."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import api
+from repro.obs import MetricsRegistry, Tracer
+from repro.serve import EngineConfig, Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_smoke_config("qwen2-72b")
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(n, tokens=2):
+    return [Request(rid=i, prompt=np.arange(4), max_new_tokens=tokens)
+            for i in range(n)]
+
+
+def test_admission_counters_and_gauges(engine_setup):
+    cfg, params = engine_setup
+    mx, tr = MetricsRegistry(), Tracer()
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=2, t_cache=64),
+                      trace=tr, metrics=mx)
+    eng.add_requests(_reqs(4))
+    # 4 in, 2 slots: two admitted, two queued
+    assert mx.count("requests_in") == 4
+    assert mx.count("requests_admitted") == 2
+    assert mx.gauges["pending_depth"] == 2
+    assert mx.gauges["active_slots"] == 2
+    eng.run(jax.random.PRNGKey(0), [])
+    assert mx.count("requests_admitted") == 4
+    assert mx.count("requests_done") == 4
+    assert mx.count("tokens_out") == 4 * 2  # every request emitted its budget
+    assert mx.gauges["pending_depth"] == 0
+    assert mx.gauges["active_slots"] == 0
+    assert mx.count("prefills") >= 1
+
+
+def test_step_and_prefill_spans(engine_setup):
+    cfg, params = engine_setup
+    tr = Tracer()
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=2, t_cache=64),
+                      trace=tr, metrics=MetricsRegistry())
+    eng.run(jax.random.PRNGKey(0), _reqs(2))
+    assert len(tr.named("engine.prefill")) >= 1
+    steps = tr.named("engine.step")
+    assert len(steps) >= 2
+    assert steps[0].attrs["step"] == 0
+    assert all(s.done for s in tr.spans)
+
+
+def test_untraced_engine_unchanged(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=2, t_cache=64))
+    assert eng.trace is None and eng.metrics is None
+    out = eng.run(jax.random.PRNGKey(0), _reqs(2))
+    assert all(r.done for r in out)

@@ -1,0 +1,55 @@
+"""StragglerWatch telemetry: the un-started-watch fix + metrics routing."""
+
+import pytest
+
+from repro.distributed.fault import StragglerWatch
+from repro.obs import MetricsRegistry
+
+
+class TestUnstartedWatch:
+    def test_step_end_without_start_raises(self):
+        # previously this measured `now - now`, silently reported 0.0, and
+        # poisoned the EWMA toward zero -- flagging every real step after
+        with pytest.raises(RuntimeError, match="without a matching step_start"):
+            StragglerWatch().step_end(0)
+
+    def test_step_end_consumes_the_start(self):
+        w = StragglerWatch()
+        w.step_start()
+        w.step_end(0)
+        with pytest.raises(RuntimeError):
+            w.step_end(1)  # second end without a fresh start
+
+    def test_normal_cycle_still_works(self):
+        w = StragglerWatch()
+        for step in range(3):
+            w.step_start()
+            assert w.step_end(step) is False
+        assert w.ewma is not None and w.flagged_steps == []
+
+
+class TestMetricsRouting:
+    def test_observe_routes_counters_and_histogram(self):
+        mx = MetricsRegistry()
+        w = StragglerWatch(threshold=3.0, metrics=mx)
+        for step in range(5):
+            w.observe(step, 0.010)
+        assert w.observe(5, 0.100) is True   # 10x the EWMA: flagged
+        assert mx.count("watch_steps") == 6
+        assert mx.count("watch_slow_steps") == 1
+        h = mx.hist("watch_step_ms")
+        assert h.n == 6
+        assert h.max_ms == pytest.approx(100.0)
+
+    def test_step_end_feeds_metrics_too(self):
+        mx = MetricsRegistry()
+        w = StragglerWatch(metrics=mx)
+        w.step_start()
+        w.step_end(0)
+        assert mx.count("watch_steps") == 1
+        assert mx.hist("watch_step_ms").n == 1
+
+    def test_no_metrics_is_the_default(self):
+        w = StragglerWatch()
+        assert w.metrics is None
+        w.observe(0, 0.01)  # runs without a registry

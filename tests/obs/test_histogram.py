@@ -1,0 +1,113 @@
+"""LatencyHistogram + percentile: exactness, binning, and fallback honesty."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs.histogram import PAPER_BUDGET_MS, LatencyHistogram, percentile
+
+
+class TestPercentile:
+    def test_matches_numpy_linear_exactly(self):
+        rng = np.random.default_rng(0)
+        for n in (1, 2, 3, 7, 100, 1001):
+            xs = rng.lognormal(mean=-1.0, sigma=2.0, size=n).tolist()
+            for q in (0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0):
+                # same formula as numpy's linear method; tolerance covers
+                # a 1-ulp difference in floating-point evaluation order
+                assert percentile(xs, q) == pytest.approx(
+                    float(np.percentile(xs, q)), rel=1e-14
+                ), (n, q)
+
+    def test_order_independent(self):
+        xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+        assert percentile(xs, 50) == 3.0
+        assert percentile(sorted(xs, reverse=True), 50) == 3.0
+
+    def test_rejects_bad_inputs(self):
+        with pytest.raises(ValueError, match="no samples"):
+            percentile([], 50)
+        with pytest.raises(ValueError, match=r"\[0, 100\]"):
+            percentile([1.0], 101)
+
+
+class TestHistogram:
+    def test_percentiles_exact_while_retained(self):
+        h = LatencyHistogram()
+        rng = np.random.default_rng(1)
+        xs = rng.lognormal(mean=0.0, sigma=1.5, size=500)
+        for x in xs:
+            h.observe(float(x))
+        assert h.exact
+        for q in (50, 90, 99):
+            assert h.percentile(q) == pytest.approx(float(np.percentile(xs, q)))
+        assert h.n == 500
+        assert h.min_ms == pytest.approx(xs.min())
+        assert h.max_ms == pytest.approx(xs.max())
+        assert h.mean_ms == pytest.approx(xs.mean())
+
+    def test_observe_many_equals_observe_loop(self):
+        rng = np.random.default_rng(2)
+        xs = rng.lognormal(size=300).tolist()
+        a, b = LatencyHistogram(budget_ms=1.0), LatencyHistogram(budget_ms=1.0)
+        for x in xs:
+            a.observe(x)
+        b.observe_many(xs)
+        assert a.counts == b.counts
+        assert a.n == b.n
+        assert a.under_budget == b.under_budget
+        assert a.total_ms == pytest.approx(b.total_ms)
+        assert a.p99 == pytest.approx(b.p99)
+        assert a.rows() == b.rows()
+
+    def test_bin_fallback_is_flagged_and_bounded(self):
+        # past the retention cap percentiles degrade to bin interpolation:
+        # still monotone and inside [min, max], and `exact` says so
+        h = LatencyHistogram(max_samples=10)
+        rng = np.random.default_rng(3)
+        xs = rng.lognormal(sigma=2.0, size=1000)
+        h.observe_many(xs.tolist())
+        assert not h.exact
+        last = -math.inf
+        for q in (0, 10, 50, 90, 99, 100):
+            p = h.percentile(q)
+            assert h.min_ms <= p <= h.max_ms
+            assert p >= last
+            last = p
+        # coarse agreement with the true percentiles (log bins, 8/decade)
+        assert h.p50 == pytest.approx(float(np.percentile(xs, 50)), rel=0.5)
+
+    def test_under_and_overflow_bins(self):
+        h = LatencyHistogram(lo_ms=1.0, hi_ms=100.0, bins_per_decade=2)
+        h.observe(0.01)    # underflow
+        h.observe(5000.0)  # overflow
+        rows = h.rows()
+        assert rows[0][0] == 0.0 and rows[0][2] == 1
+        assert rows[-1][1] == math.inf and rows[-1][2] == 1
+        assert sum(c for _, _, c in rows) == h.n == 2
+
+    def test_budget_annotation(self):
+        h = LatencyHistogram(budget_ms=PAPER_BUDGET_MS)
+        h.observe_many([0.1, 0.2, 0.3, 0.9])
+        assert h.budget_fraction() == pytest.approx(0.75)
+        s = h.summary()
+        assert s["budget_ms"] == PAPER_BUDGET_MS
+        assert s["budget_fraction"] == pytest.approx(0.75)
+        assert s["exact"] is True
+
+    def test_no_budget_means_nan_fraction(self):
+        h = LatencyHistogram()
+        h.observe(1.0)
+        assert math.isnan(h.budget_fraction())
+        assert "budget_ms" not in h.summary()
+
+    def test_empty_histogram_raises_on_percentile(self):
+        with pytest.raises(ValueError, match="empty"):
+            LatencyHistogram().percentile(50)
+
+    def test_rejects_bad_config(self):
+        with pytest.raises(ValueError):
+            LatencyHistogram(lo_ms=10.0, hi_ms=1.0)
+        with pytest.raises(ValueError):
+            LatencyHistogram(bins_per_decade=0)

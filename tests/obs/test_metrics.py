@@ -1,0 +1,55 @@
+"""MetricsRegistry: counters, gauges, histogram namespace, CSV artifact."""
+
+import csv
+
+import pytest
+
+from repro.obs import MetricsRegistry
+
+
+class TestRegistry:
+    def test_counters(self):
+        m = MetricsRegistry()
+        assert m.count("frames_in") == 0
+        assert m.inc("frames_in") == 1
+        assert m.inc("frames_in", 4) == 5
+        assert m.count("frames_in") == 5
+
+    def test_gauges_overwrite(self):
+        m = MetricsRegistry()
+        m.set_gauge("pending", 3)
+        m.set_gauge("pending", 1)
+        assert m.gauges["pending"] == 1.0
+
+    def test_hist_get_or_create_applies_kwargs_once(self):
+        m = MetricsRegistry()
+        h = m.hist("frame_ms", budget_ms=0.4)
+        assert m.hist("frame_ms", budget_ms=99.0) is h  # kwargs only on create
+        assert h.budget_ms == 0.4
+        m.observe("frame_ms", 0.2)
+        assert h.n == 1
+
+    def test_as_dict_snapshot(self):
+        m = MetricsRegistry()
+        m.inc("launches")
+        m.set_gauge("in_flight", 2)
+        m.observe("frame_ms", 1.5)
+        d = m.as_dict()
+        assert d["counters"] == {"launches": 1}
+        assert d["gauges"] == {"in_flight": 2.0}
+        assert d["histograms"]["frame_ms"]["n"] == 1
+
+    def test_write_hist_csv(self, tmp_path):
+        m = MetricsRegistry()
+        m.observe("a_ms", 0.5)
+        m.observe("a_ms", 2.0)
+        m.observe("b_ms", 10.0)
+        path = m.write_hist_csv(str(tmp_path / "h.csv"), extra={"run": "test"})
+        with open(path, newline="") as f:
+            rows = list(csv.DictReader(f))
+        assert rows and set(rows[0]) == {"hist", "bin_lo_ms", "bin_hi_ms",
+                                         "count", "run"}
+        assert sum(int(r["count"]) for r in rows if r["hist"] == "a_ms") == 2
+        assert all(r["run"] == "test" for r in rows)
+        for r in rows:  # bins are sane intervals
+            assert float(r["bin_lo_ms"]) < float(r["bin_hi_ms"])
