@@ -1,0 +1,219 @@
+"""Multi-tenant serving race: mixed 7-scenario workload, nominal vs. chaos.
+
+Two rows make the fleet-level serving tier a measured artifact:
+
+* ``serve_mixed_nominal`` -- all 7 scenario tenants interleaved through one
+  :class:`~repro.serve.router.BayesRouter` (submit in round-robin chunks,
+  one ``drain``), no fault injection.  ``us_per_call`` is wall time per
+  *frame* (min over rounds, the shared-tenant noise-robust estimator), so
+  the derived decisions/s is the sustained mixed-workload throughput the
+  trajectory gate tracks.
+* ``serve_mixed_chaos5`` -- the same workload under a seeded
+  :class:`~repro.distributed.fault.LaunchFaultInjector` at 5% total launch
+  faults (2% dropped, 1% stalled, 2% corrupted harvests).  The row's
+  structured fields carry the terminal-status census: ``lost_frames`` MUST
+  be 0 (``check_bench.check_serve`` gates it -- the never-drop invariant at
+  fleet scale) and ``deadline_hit_rate`` must hold its floor.
+
+Both rows run against the same router construction (scenario-keyed plan
+cache, CRC-of-name tenant salts), so the nominal row doubles as the router's
+throughput baseline and the chaos row isolates the price of the failure
+responses (re-dispatch, backoff, breaker) rather than of a different setup.
+:func:`write_degradation_report` snapshots the per-tenant census to CSV --
+the CI chaos-smoke artifact.
+"""
+
+from __future__ import annotations
+
+import csv
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+SCENARIO_NAMES = ("sensor-degradation", "pedestrian-night", "lane-change",
+                  "intersection", "obstacle-detection", "obstacle-class",
+                  "intersection-cat")
+FRAMES_PER_TENANT = 24
+FRAMES_PER_TENANT_QUICK = 8
+ROUNDS = 3
+ROUNDS_QUICK = 2
+CHUNK = 4          # round-robin submission granularity (tenant interleave)
+N_BITS = 1024
+MAX_BATCH = 32
+# Chaos launches cap at 8 lanes so the same workload takes ~4x the launches:
+# at 5% per-launch fault rates the schedule actually draws faults in a bench-
+# sized run instead of sailing through on a lucky handful of big launches.
+MAX_BATCH_CHAOS = 8
+# 5% total injected launch faults, the CI chaos rate.  Verdicts are a pure
+# function of (seed, tenant salt, ticket), so the schedule replays exactly;
+# seed 7 was chosen because it draws several faults of every kind inside a
+# bench-sized ticket range (a seed that happens to draw nothing would make
+# the chaos row a nominal row with a scarier name).
+CHAOS = dict(seed=7, p_drop=0.02, p_stall=0.01, p_corrupt=0.02, stall_ms=2.0)
+
+
+def _policy():
+    from repro.serve import RouterPolicy
+
+    # fast failure-response constants so a chaos drain converges in bench
+    # time; admission/degradation semantics are the defaults
+    return RouterPolicy(
+        backoff_base_s=1e-4, backoff_cap_s=5e-3, breaker_cooldown_s=0.02
+    )
+
+
+def _workload(n_frames: int):
+    """Per-tenant evidence batches, seeded per scenario."""
+    from repro.bayesnet import by_name, sample_evidence
+
+    return {
+        name: np.asarray(
+            sample_evidence(by_name(name), jax.random.PRNGKey(i + 1), n_frames)
+        )
+        for i, name in enumerate(SCENARIO_NAMES)
+    }
+
+
+def _run_round(router, workload, deadline_ms=None):
+    """Submit the whole mixed workload interleaved, drain, census the round."""
+    rids = []
+    t0 = time.perf_counter()
+    n_frames = len(next(iter(workload.values())))
+    for lo in range(0, n_frames, CHUNK):
+        for name, ev in workload.items():
+            rids += router.submit(name, ev[lo:lo + CHUNK], deadline_ms=deadline_ms)
+    router.drain()
+    dt_us = (time.perf_counter() - t0) * 1e6
+    census = {"OK": 0, "DEGRADED": 0, "UNRELIABLE": 0, "REJECTED": 0}
+    lost = hits = 0
+    for rid in rids:
+        res = router.results.get(rid)
+        if res is None:
+            lost += 1
+            continue
+        census[res.status] += 1
+        hits += int(res.deadline_met)
+    return len(rids), census, lost, hits, dt_us
+
+
+def _race(router, workload, rounds: int):
+    """Warmup (compile) + timed rounds; returns aggregates over timed rounds.
+
+    The warmup round runs with a 10-minute deadline: its job is to compile
+    every tenant's plan, and on a 1-vCPU container 7 lazy compiles take tens
+    of seconds -- against the default 1 s deadline the later tenants would be
+    shed before ever building a plan, and the timed rounds would then pay
+    the compiles the warmup exists to absorb.
+    """
+    _run_round(router, workload, deadline_ms=600_000)   # warmup: plans compile
+    totals = {"OK": 0, "DEGRADED": 0, "UNRELIABLE": 0, "REJECTED": 0}
+    n = lost = hits = 0
+    per_frame_us = []
+    for _ in range(rounds):
+        rn, census, rl, rh, dt_us = _run_round(router, workload)
+        n += rn
+        lost += rl
+        hits += rh
+        for k, v in census.items():
+            totals[k] += v
+        per_frame_us.append(dt_us / rn)
+    return n, totals, lost, hits, common.Timing(min(per_frame_us), per_frame_us)
+
+
+def write_degradation_report(path: str, router) -> str:
+    """Per-tenant terminal-status census CSV (the CI chaos-smoke artifact)."""
+    from repro.obs.histogram import percentile
+
+    by_tenant: dict = {}
+    for res in router.results.values():
+        row = by_tenant.setdefault(
+            res.tenant,
+            {"OK": 0, "DEGRADED": 0, "UNRELIABLE": 0, "REJECTED": 0,
+             "deadline_hits": 0, "latencies": []},
+        )
+        row[res.status] += 1
+        row["deadline_hits"] += int(res.deadline_met)
+        row["latencies"].append(res.latency_ms)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["tenant", "frames", "ok", "degraded", "unreliable",
+                    "rejected", "deadline_hit_rate", "p50_ms", "p99_ms"])
+        for name in sorted(by_tenant):
+            r = by_tenant[name]
+            frames = sum(r[s] for s in ("OK", "DEGRADED", "UNRELIABLE",
+                                        "REJECTED"))
+            w.writerow([
+                name, frames, r["OK"], r["DEGRADED"], r["UNRELIABLE"],
+                r["REJECTED"], round(r["deadline_hits"] / max(frames, 1), 4),
+                round(percentile(r["latencies"], 50.0), 3),
+                round(percentile(r["latencies"], 99.0), 3),
+            ])
+    return path
+
+
+def run(quick: bool = False, report_path: str | None = None) -> None:
+    from repro.distributed.fault import LaunchFaultInjector
+    from repro.serve import BayesRouter
+
+    n_frames = FRAMES_PER_TENANT_QUICK if quick else FRAMES_PER_TENANT
+    rounds = ROUNDS_QUICK if quick else ROUNDS
+    workload = _workload(n_frames)
+    base_key = jax.random.PRNGKey(42)
+
+    # --- nominal: throughput baseline (rides the 30% trajectory gate) ------
+    router = BayesRouter(
+        _policy(), base_key, n_bits=N_BITS, max_batch=MAX_BATCH,
+        max_cached_tenants=len(SCENARIO_NAMES),
+    )
+    n, census, lost, hits, us = _race(router, workload, rounds)
+    common.emit(
+        "serve_mixed_nominal",
+        us,
+        f"{len(SCENARIO_NAMES)} tenants x {n_frames} frames x {rounds} rounds "
+        f"-> {1e6 / us:,.0f} decisions/s | "
+        + " ".join(f"{k}:{v}" for k, v in census.items())
+        + f" lost:{lost}",
+        extra={
+            "lost_frames": lost, "ok": census["OK"],
+            "degraded": census["DEGRADED"],
+            "unreliable": census["UNRELIABLE"],
+            "rejected": census["REJECTED"],
+            "deadline_hit_rate": round(hits / max(n, 1), 4),
+            "tenants": len(SCENARIO_NAMES),
+        },
+    )
+
+    # --- chaos: 5% seeded launch faults, never-drop invariant gated --------
+    chaos_router = BayesRouter(
+        _policy(), base_key, n_bits=N_BITS, max_batch=MAX_BATCH_CHAOS,
+        fault=LaunchFaultInjector(**CHAOS),
+        max_cached_tenants=len(SCENARIO_NAMES),
+    )
+    n, census, lost, hits, us = _race(chaos_router, workload, rounds)
+    inj = chaos_router.fault.injected
+    common.emit(
+        "serve_mixed_chaos5",
+        us,
+        f"5% launch faults (drop:{inj['drop']} stall:{inj['stall']} "
+        f"corrupt:{inj['corrupt']}) -> {1e6 / us:,.0f} decisions/s | "
+        + " ".join(f"{k}:{v}" for k, v in census.items())
+        + f" lost:{lost}",
+        extra={
+            "lost_frames": lost, "ok": census["OK"],
+            "degraded": census["DEGRADED"],
+            "unreliable": census["UNRELIABLE"],
+            "rejected": census["REJECTED"],
+            "deadline_hit_rate": round(hits / max(n, 1), 4),
+            "faults_injected": sum(inj.values()),
+        },
+    )
+    if report_path is not None:
+        print(f"# wrote {write_degradation_report(report_path, chaos_router)}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

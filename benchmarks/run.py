@@ -20,6 +20,7 @@ def main() -> None:
         bench_latency,
         bench_reliability,
         bench_roofline,
+        bench_serve,
         bench_table_s1,
         common,
     )
@@ -34,6 +35,7 @@ def main() -> None:
         bench_fig4_fusion,
         bench_bayesnet,
         bench_reliability,
+        bench_serve,
         bench_latency,
         bench_roofline,
     ):

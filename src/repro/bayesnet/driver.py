@@ -80,10 +80,26 @@ hits/misses, and entropy words generated, and feeds ``frame_ms`` (enqueue ->
 emit, annotated with the paper's 0.4 ms budget) and ``launch_ms``
 (dispatch -> harvest) histograms; the watchdog writes into the same registry.
 ``trace=None`` (default) leaves every hot path untouched.
+
+**Fault tolerance.**  ``fault=LaunchFaultInjector(...)`` threads seeded chaos
+through the launch path (dropped launches, stalled dispatches, corrupted
+harvest buffers), and :meth:`harvest` is all-or-nothing *per launch* either
+way: every harvested buffer is validated (finite posteriors, non-negative
+accepted counts), and any exception while processing one launch -- injected
+or organic -- recovers instead of stranding the fleet.  Recovery closes the
+launch's spans, records a :class:`LaunchFailure` (``driver.launch_failures``,
+``stats.launch_failures``), and re-enqueues the launch's frames at the front
+of their queue so the next ``step`` re-dispatches them with *fresh entropy*
+(the launch counter advanced, so a re-launch never replays the failed draw).
+A frame that fails ``max_redispatch`` launches is emitted with a zero
+posterior, ``accepted=0`` and a ``reliable=False`` report -- the never-drop
+invariant extends to failing hardware: every submitted frame terminates.
+``fault=None`` with healthy buffers is bit-identical to the pre-fault driver.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import time
 from collections import deque
@@ -99,11 +115,45 @@ from repro.bayesnet.reliability import (
     RetryPolicy,
     decision_confidence,
 )
-from repro.distributed.fault import StragglerWatch
+from repro.distributed.fault import LaunchFault, LaunchFaultInjector, StragglerWatch
 from repro.obs import PAPER_BUDGET_MS, MetricsRegistry, Tracer
 
 # Process-wide source of default driver salts (one per construction).
 _DRIVER_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unharvested launch (dispatch order preserved)."""
+
+    ticket: int
+    taken: list                      # (rid, row, attempt, bits_before) tuples
+    attempt: int
+    post: object                     # device posteriors (None for a dropped launch)
+    accepted: object                 # device accepted counts (None when dropped)
+    lspan: Optional[int]             # launch span id
+    dspan: Optional[int]             # device span id
+    t_dispatch: Optional[float]      # dispatch wall-clock
+    fault: Optional[str] = None      # injected fault kind, if any
+    hspan: Optional[int] = None      # harvest span id (opened at harvest)
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchFailure:
+    """One failed launch, as recorded by :meth:`FrameDriver.harvest`.
+
+    ``kind`` is the injected fault kind when the failure was injected, else
+    the :class:`~repro.distributed.fault.LaunchFault` kind (``"invalid"`` for
+    organically corrupted buffers) or ``"error"`` for any other exception.
+    ``rids`` are the frames that rode the launch (re-enqueued or flagged by
+    the recovery path, never dropped).
+    """
+
+    ticket: int
+    kind: str
+    rids: Tuple[int, ...]
+    attempt: int
+    error: str
 
 
 class FrameDriver:
@@ -117,14 +167,22 @@ class FrameDriver:
         watchdog: StragglerWatch | None = None,
         trace: Tracer | None = None,
         metrics: MetricsRegistry | None = None,
+        fault: LaunchFaultInjector | None = None,
+        max_redispatch: int = 3,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if retry is not None and not isinstance(retry, RetryPolicy):
             raise TypeError(f"retry must be a RetryPolicy or None, got {type(retry)!r}")
+        if max_redispatch < 0:
+            raise ValueError(f"max_redispatch must be >= 0, got {max_redispatch}")
         self.net = net
         self.max_batch = int(max_batch)
         self.retry = retry
+        self.fault = fault
+        self.max_redispatch = int(max_redispatch)
+        self.launch_failures: List[LaunchFailure] = []
+        self._fail_counts: Dict[int, int] = {}   # rid -> failed launches so far
         self._queue: deque = deque()
         self._next_rid = 0
         self.salt = next(_DRIVER_IDS) if salt is None else int(salt)
@@ -132,12 +190,7 @@ class FrameDriver:
         self._base_key = jax.random.fold_in(base, self.salt)
         self._launches = 0
         self._dispatches = 0
-        # dispatched-but-unharvested launches, in dispatch order:
-        # (ticket, taken (rid, row, attempt, bits_before) tuples,
-        #  attempt level, device posteriors, device accepted counts,
-        #  launch span id | None, device span id | None,
-        #  dispatch wall-clock | None)
-        self._inflight: deque = deque()
+        self._inflight: deque[_InFlight] = deque()   # in dispatch order
         self.last_launch_shape: Optional[Tuple[int, int]] = None
         # --- telemetry (inert when both are None) ---
         self.trace = trace
@@ -263,10 +316,22 @@ class FrameDriver:
             ev, n_real = self._pack(taken)
         self.last_launch_shape = ev.shape
         net = self.net if attempt == 0 else self._net_for(attempt)
+        injected = (
+            self.fault.draw(self.salt, self._dispatches)
+            if self.fault is not None else None
+        )
         if mx is not None:
             t_dispatch = time.perf_counter()
         self.watch.step_start()
-        if tr is not None:
+        if injected == "stall":
+            # host-side latency sized to trip the StragglerWatch threshold;
+            # the launch itself still runs and harvests normally
+            time.sleep(self.fault.stall_ms / 1e3)
+        if injected == "drop":
+            # the launch never runs: nothing is enqueued, harvest finds no
+            # result and routes the frames through the recovery path
+            post = accepted = None
+        elif tr is not None:
             # host-side dispatch only: under async dispatch net.run returns
             # as soon as the work is enqueued, so this span is trace/compile
             # lookup + enqueue -- the device interval is the `device` span
@@ -285,16 +350,20 @@ class FrameDriver:
             mx.inc("launches")
             mx.inc(f"bucket_{ev.shape[0]}")
             mx.inc("padded_lanes", ev.shape[0] - n_real)
-            mx.inc(
-                "entropy_words",
-                ev.shape[0] * (net.n_bits // 32) * net.spec.n_nodes,
-            )
+            if injected is not None:
+                mx.inc(f"fault_injected_{injected}")
+            if post is not None:
+                mx.inc(
+                    "entropy_words",
+                    ev.shape[0] * (net.n_bits // 32) * net.spec.n_nodes,
+                )
             if attempt > 0:
                 mx.inc(f"retry_launches_attempt_{attempt}")
             mx.set_gauge("in_flight", len(self._inflight) + 1)
             mx.set_gauge("pending", len(self._queue))
         self._inflight.append(
-            (ticket, taken, attempt, post, accepted, lspan, dspan, t_dispatch)
+            _InFlight(ticket, taken, attempt, post, accepted, lspan, dspan,
+                      t_dispatch, fault=injected)
         )
         return ticket
 
@@ -333,80 +402,174 @@ class FrameDriver:
         returned (dispatch them with the next ``step``/``drain``); emitted
         frames additionally gain a ``reports[rid]`` entry and roll into
         ``stats``.
+
+        **All-or-nothing per launch.**  Harvested buffers are validated
+        (finite posteriors, non-negative accepted counts) and any exception
+        while converting or gating one launch is caught *per launch*: the
+        failed launch's frames are re-enqueued at the front of their queue
+        (main or retry, original order preserved, re-dispatched with fresh
+        entropy next ``step``) or -- past ``max_redispatch`` failed launches
+        -- emitted with a zero posterior and ``reliable=False``; rid maps,
+        submit timestamps and span state are restored either way, and the
+        remaining in-flight launches harvest normally.  A raise mid-harvest
+        can no longer strand the fleet.
         """
         out: Dict[int, Tuple[np.ndarray, int]] = {}
-        tr, mx = self.trace, self.metrics
         while self._inflight:
-            ticket, taken, attempt, post, accepted, lspan, dspan, t_disp = (
-                self._inflight.popleft()
-            )
-            hspan = None
-            if tr is not None:
-                hspan = tr.begin("harvest", parent=lspan, ticket=ticket)
-            post, accepted = np.asarray(post), np.asarray(accepted)
-            if tr is not None:
-                # first observable point at which this launch's device work
-                # is complete: the host just blocked on its arrays
-                tr.end(dspan)
-            t_now = time.perf_counter() if mx is not None else None
-            emitted: List[int] = []
-            if self.retry is None:
-                for i, (rid, _, _, _) in enumerate(taken):
-                    out[rid] = (post[i], int(accepted[i]))
-                    emitted.append(rid)
-            else:
-                n_real = len(taken)
-                conf = decision_confidence(post[:n_real], accepted[:n_real])
-                n_bits = (self.net if attempt == 0 else self._nets[attempt]).n_bits
-                for i, (rid, row, _, bits_before) in enumerate(taken):
-                    total = bits_before + n_bits
-                    ok = bool(conf[i] >= self.retry.min_confidence)
-                    if tr is not None and rid in self._retry_spans:
-                        # this launch carried the frame's retry attempt: close
-                        # the span opened when it was flagged
-                        tr.end(self._retry_spans.pop(rid), confidence=float(conf[i]))
-                    if not ok and attempt < self.retry.max_retries:
-                        self._retry_q.append((rid, row, attempt + 1, total))
-                        if tr is not None:
-                            self._retry_spans[rid] = tr.begin(
-                                f"retry[{rid}]", parent=lspan, track="retry",
-                                attempt=attempt + 1, confidence=float(conf[i]),
-                            )
-                        if mx is not None:
-                            mx.inc(f"retry_attempt_{attempt + 1}")
-                        continue
-                    out[rid] = (post[i], int(accepted[i]))
-                    emitted.append(rid)
-                    self.reports[rid] = FrameReport(
-                        confidence=float(conf[i]), attempts=attempt + 1,
-                        n_bits=n_bits, total_bits=total, reliable=ok,
-                    )
-                    self.stats.record_frame(float(conf[i]), attempt, total, ok)
-                    if mx is not None and not ok:
-                        mx.inc("flagged_unreliable")
-            if mx is not None:
-                mx.inc("frames_out", len(emitted))
-                if t_disp is not None:
-                    mx.observe(
-                        "launch_ms", (t_now - t_disp) * 1e3,
-                        budget_ms=PAPER_BUDGET_MS,
-                    )
-                # one dict pop per frame (C-speed map, single lookup), with
-                # the arithmetic vectorised: harvest bookkeeping is on the
-                # <=5% overhead budget
-                waits = [
-                    t for t in map(self._t_submit.pop, emitted,
-                                   itertools.repeat(None))
-                    if t is not None
-                ]
-                if waits:
-                    mx.hist("frame_ms", budget_ms=PAPER_BUDGET_MS).observe_many(
-                        (t_now - np.asarray(waits)) * 1e3
-                    )
-            if tr is not None:
-                tr.end(hspan, emitted=len(emitted))
-                tr.end(lspan, ticket=ticket)
+            lf = self._inflight.popleft()
+            try:
+                self._harvest_one(lf, out)
+            except Exception as exc:   # noqa: BLE001 -- per-launch recovery
+                self._recover_launch(lf, exc, out)
         return out
+
+    def _harvest_one(self, lf: _InFlight, out: Dict[int, Tuple[np.ndarray, int]]):
+        """Convert, validate, and emit one launch (raises on a bad launch)."""
+        tr, mx = self.trace, self.metrics
+        taken, attempt = lf.taken, lf.attempt
+        if tr is not None:
+            lf.hspan = tr.begin("harvest", parent=lf.lspan, ticket=lf.ticket)
+        if lf.post is None:
+            # dropped launch: nothing was ever enqueued
+            raise LaunchFault("drop", lf.ticket, "launch produced no result")
+        post, accepted = np.asarray(lf.post), np.asarray(lf.accepted)
+        if tr is not None:
+            # first observable point at which this launch's device work
+            # is complete: the host just blocked on its arrays
+            tr.end(lf.dspan)
+        if lf.fault == "corrupt":
+            # injected buffer corruption: validation below must catch it
+            post = np.full_like(post, np.nan)
+        if not np.all(np.isfinite(post)):
+            raise LaunchFault("invalid", lf.ticket, "non-finite posterior buffer")
+        if np.any(accepted < 0):
+            raise LaunchFault("invalid", lf.ticket, "negative accepted count")
+        t_now = time.perf_counter() if mx is not None else None
+        emitted: List[int] = []
+        if self.retry is None:
+            for i, (rid, _, _, _) in enumerate(taken):
+                out[rid] = (post[i], int(accepted[i]))
+                emitted.append(rid)
+        else:
+            n_real = len(taken)
+            conf = decision_confidence(post[:n_real], accepted[:n_real])
+            n_bits = (self.net if attempt == 0 else self._nets[attempt]).n_bits
+            for i, (rid, row, _, bits_before) in enumerate(taken):
+                total = bits_before + n_bits
+                ok = bool(conf[i] >= self.retry.min_confidence)
+                if tr is not None and rid in self._retry_spans:
+                    # this launch carried the frame's retry attempt: close
+                    # the span opened when it was flagged
+                    tr.end(self._retry_spans.pop(rid), confidence=float(conf[i]))
+                if not ok and attempt < self.retry.max_retries:
+                    self._retry_q.append((rid, row, attempt + 1, total))
+                    if tr is not None:
+                        self._retry_spans[rid] = tr.begin(
+                            f"retry[{rid}]", parent=lf.lspan, track="retry",
+                            attempt=attempt + 1, confidence=float(conf[i]),
+                        )
+                    if mx is not None:
+                        mx.inc(f"retry_attempt_{attempt + 1}")
+                    continue
+                out[rid] = (post[i], int(accepted[i]))
+                emitted.append(rid)
+                self.reports[rid] = FrameReport(
+                    confidence=float(conf[i]), attempts=attempt + 1,
+                    n_bits=n_bits, total_bits=total, reliable=ok,
+                )
+                self.stats.record_frame(float(conf[i]), attempt, total, ok)
+                if mx is not None and not ok:
+                    mx.inc("flagged_unreliable")
+        if mx is not None:
+            mx.inc("frames_out", len(emitted))
+            if lf.t_dispatch is not None:
+                mx.observe(
+                    "launch_ms", (t_now - lf.t_dispatch) * 1e3,
+                    budget_ms=PAPER_BUDGET_MS,
+                )
+            # one dict pop per frame (C-speed map, single lookup), with
+            # the arithmetic vectorised: harvest bookkeeping is on the
+            # <=5% overhead budget
+            waits = [
+                t for t in map(self._t_submit.pop, emitted,
+                               itertools.repeat(None))
+                if t is not None
+            ]
+            if waits:
+                mx.hist("frame_ms", budget_ms=PAPER_BUDGET_MS).observe_many(
+                    (t_now - np.asarray(waits)) * 1e3
+                )
+        if tr is not None:
+            tr.end(lf.hspan, emitted=len(emitted))
+            tr.end(lf.lspan, ticket=lf.ticket)
+
+    def _zero_post(self) -> np.ndarray:
+        """The flagged-unreliable posterior for a frame no launch could serve."""
+        q = self.net.query_cards
+        if all(c == 2 for c in q):
+            return np.zeros((len(q),), np.float32)
+        return np.zeros((len(q), max(q)), np.float32)
+
+    def _recover_launch(
+        self, lf: _InFlight, exc: Exception, out: Dict[int, Tuple[np.ndarray, int]]
+    ) -> None:
+        """Restore bookkeeping for one failed launch (never drops a frame).
+
+        Spans are closed with an ``error`` attr, the failure is recorded in
+        ``launch_failures`` / ``stats`` / the metrics registry, and every
+        frame of the launch is either re-enqueued at the front of its queue
+        (fresh entropy on re-dispatch: the launch counter already advanced)
+        or, past its ``max_redispatch`` budget, emitted as a flagged zero
+        posterior so the caller still sees exactly one terminal result.
+        """
+        tr, mx = self.trace, self.metrics
+        kind = lf.fault or getattr(exc, "kind", None) or "error"
+        if tr is not None:
+            for sid in (lf.hspan, lf.dspan, lf.lspan):
+                if sid is not None and not tr.get(sid).done:
+                    tr.end(sid, error=kind)
+        self.launch_failures.append(
+            LaunchFailure(
+                ticket=lf.ticket, kind=kind,
+                rids=tuple(item[0] for item in lf.taken),
+                attempt=lf.attempt, error=str(exc),
+            )
+        )
+        self.stats.launch_failures += 1
+        if mx is not None:
+            mx.inc("launch_failures")
+            mx.inc(f"launch_failures_{kind}")
+        requeue: list = []
+        for item in lf.taken:
+            rid = item[0]
+            if rid in out:   # paranoia: never double-emit or re-enqueue emitted
+                continue
+            n_fail = self._fail_counts.get(rid, 0) + 1
+            self._fail_counts[rid] = n_fail
+            if n_fail <= self.max_redispatch:
+                requeue.append(item)
+                continue
+            # redispatch budget exhausted: graceful degradation, never a drop
+            self._fail_counts.pop(rid, None)
+            out[rid] = (self._zero_post(), 0)
+            self.reports[rid] = FrameReport(
+                confidence=0.0, attempts=lf.attempt + 1, n_bits=0,
+                total_bits=item[3], reliable=False,
+            )
+            self.stats.record_frame(0.0, lf.attempt, item[3], False)
+            self._t_submit.pop(rid, None)
+            if mx is not None:
+                mx.inc("frames_out")
+                mx.inc("fault_exhausted")
+        if requeue:
+            if mx is not None:
+                mx.inc("redispatched_frames", len(requeue))
+            if lf.attempt == 0:
+                self._queue.extendleft(
+                    (rid, row) for rid, row, _, _ in reversed(requeue)
+                )
+            else:
+                self._retry_q.extendleft(reversed(requeue))
 
     def step(
         self, key: jax.Array | None = None, block: bool = True

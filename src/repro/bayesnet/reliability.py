@@ -46,6 +46,18 @@ import numpy as np
 
 _erf = np.vectorize(math.erf, otypes=[np.float64])
 
+# Terminal frame statuses of the fleet-level serving tier
+# (:class:`~repro.serve.router.BayesRouter`): every submitted frame ends in
+# EXACTLY one of these -- the never-drop invariant, extended from the frame
+# (FrameReport.reliable) to the fleet.
+STATUS_OK = "OK"                    # served at full fidelity
+STATUS_DEGRADED = "DEGRADED"        # served with a downgraded n_bits plan
+STATUS_UNRELIABLE = "UNRELIABLE"    # emitted below confidence / after failures
+STATUS_REJECTED = "REJECTED"        # shed at admission: deadline-infeasible
+TERMINAL_STATUSES = (
+    STATUS_OK, STATUS_DEGRADED, STATUS_UNRELIABLE, STATUS_REJECTED,
+)
+
 
 def _phi(z: np.ndarray) -> np.ndarray:
     """Standard normal CDF, elementwise."""
@@ -172,6 +184,7 @@ class ReliabilityStats:
     retries: int = 0
     unreliable: int = 0
     slow_launches: int = 0
+    launch_failures: int = 0
     total_bits: int = 0
     confidence_sum: float = 0.0
     min_confidence: Optional[float] = None
@@ -212,6 +225,7 @@ class ReliabilityStats:
         self.retries += other.retries
         self.unreliable += other.unreliable
         self.slow_launches += other.slow_launches
+        self.launch_failures += other.launch_failures
         self.total_bits += other.total_bits
         self.confidence_sum += other.confidence_sum
         if other.min_confidence is not None:
@@ -231,6 +245,7 @@ class ReliabilityStats:
             "retry_rate": self.retry_rate,
             "unreliable": self.unreliable,
             "slow_launches": self.slow_launches,
+            "launch_failures": self.launch_failures,
             "mean_bits": self.mean_bits,
             "mean_confidence": self.mean_confidence,
             "min_confidence": (

@@ -1,1 +1,7 @@
 from repro.serve.engine import EngineConfig, Request, ServeEngine  # noqa: F401
+from repro.serve.router import (  # noqa: F401
+    BayesRouter,
+    RouterPolicy,
+    RouterResult,
+    tenant_salt,
+)

@@ -1,0 +1,195 @@
+"""FrameDriver fault tolerance: injected chaos + all-or-nothing harvest.
+
+* **injector**: seeded verdicts are a pure function of the launch identity,
+  rates validate, and a zero-rate injector is bit-identical to no injector.
+* **recovery**: dropped / corrupted launches re-enqueue their frames at the
+  front of the queue and re-dispatch with fresh entropy; the redispatch
+  budget exhausts into a flagged zero posterior, never a dropped frame.
+* **regression** (exception safety): a raise while harvesting one launch --
+  injected or organic -- no longer strands the other in-flight launches or
+  leaves rid bookkeeping inconsistent.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bayesnet import FrameDriver, by_name, compile_network
+from repro.distributed.fault import LaunchFault, LaunchFaultInjector
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def net():
+    return compile_network(by_name("sensor-degradation"), 128)
+
+
+def _frames(net, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2, size=(n, len(net.evidence)), dtype=np.int32)
+
+
+class _FaultOnTickets(LaunchFaultInjector):
+    """Deterministic injector: a fixed fault kind on chosen dispatch tickets."""
+
+    def __init__(self, kind, tickets):
+        super().__init__()
+        self.kind = kind
+        self.tickets = set(tickets)
+
+    def draw(self, salt, ticket):
+        if ticket in self.tickets:
+            self.injected[self.kind] += 1
+            return self.kind
+        return None
+
+
+# --- the injector ------------------------------------------------------------------
+
+def test_injector_verdicts_are_pure_functions_of_identity():
+    a = LaunchFaultInjector(seed=3, p_drop=0.2, p_stall=0.2, p_corrupt=0.2)
+    b = LaunchFaultInjector(seed=3, p_drop=0.2, p_stall=0.2, p_corrupt=0.2)
+    ids = [(s, t) for s in range(4) for t in range(16)]
+    assert [a.draw(*i) for i in ids] == [b.draw(*i) for i in ids]
+    # a different seed gives a different schedule
+    c = LaunchFaultInjector(seed=4, p_drop=0.2, p_stall=0.2, p_corrupt=0.2)
+    assert [a.draw(*i) for i in ids] != [c.draw(*i) for i in ids]
+
+
+def test_injector_rate_validation():
+    with pytest.raises(ValueError, match="p_drop"):
+        LaunchFaultInjector(p_drop=1.5)
+    with pytest.raises(ValueError, match="sum"):
+        LaunchFaultInjector(p_drop=0.6, p_corrupt=0.6)
+
+
+def test_zero_rate_injector_is_bit_identical(net):
+    fr = _frames(net, 6)
+    plain = FrameDriver(net, max_batch=4, base_key=KEY, salt=11)
+    plain.submit(fr)
+    ref = plain.drain()
+    chaos = FrameDriver(
+        net, max_batch=4, base_key=KEY, salt=11, fault=LaunchFaultInjector(seed=0)
+    )
+    chaos.submit(fr)
+    out = chaos.drain()
+    assert sorted(out) == sorted(ref)
+    for rid in ref:
+        np.testing.assert_array_equal(out[rid][0], ref[rid][0])
+        assert out[rid][1] == ref[rid][1]
+    assert chaos.launch_failures == []
+
+
+# --- recovery ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["drop", "corrupt"])
+def test_failed_launch_redispatches_and_serves_every_frame(net, kind):
+    fr = _frames(net, 4)
+    d = FrameDriver(
+        net, max_batch=4, base_key=KEY, salt=5, fault=_FaultOnTickets(kind, {0})
+    )
+    rids = d.submit(fr)
+    out = d.drain()
+    assert sorted(out) == rids                       # every frame terminated
+    assert all(np.all(np.isfinite(p)) for p, _ in out.values())
+    assert len(d.launch_failures) == 1
+    failure = d.launch_failures[0]
+    assert failure.kind == kind and failure.ticket == 0
+    assert failure.rids == tuple(rids)
+    assert d.stats.launch_failures == 1
+    # the re-dispatch drew fresh entropy: a clean driver's launch 0 result
+    # differs from the recovered launch-1 result (same frames, new key)
+    clean = FrameDriver(net, max_batch=4, base_key=KEY, salt=5)
+    clean.submit(fr)
+    ref = clean.drain()
+    assert any(
+        not np.array_equal(out[r][0], ref[r][0]) or out[r][1] != ref[r][1]
+        for r in rids
+    )
+
+
+def test_redispatch_exhaustion_emits_flagged_zero_posterior(net):
+    fr = _frames(net, 3)
+    d = FrameDriver(
+        net, max_batch=4, base_key=KEY, salt=6,
+        fault=LaunchFaultInjector(seed=0, p_drop=1.0), max_redispatch=2,
+    )
+    rids = d.submit(fr)
+    out = d.drain()
+    assert sorted(out) == rids                       # never-drop, even at 100%
+    for rid in rids:
+        post, accepted = out[rid]
+        assert accepted == 0 and np.all(post == 0.0)
+        assert d.reports[rid].reliable is False
+        assert d.reports[rid].confidence == 0.0
+    # 1 initial + 2 redispatches, every one dropped
+    assert len(d.launch_failures) == 3
+    assert d._fail_counts == {}                      # bookkeeping cleaned up
+
+
+def test_stalled_launch_still_serves(net):
+    fr = _frames(net, 2)
+    inj = _FaultOnTickets("stall", {0})
+    inj.stall_ms = 1.0
+    d = FrameDriver(net, max_batch=4, base_key=KEY, salt=8, fault=inj)
+    rids = d.submit(fr)
+    out = d.drain()
+    assert sorted(out) == rids
+    assert d.launch_failures == []                   # a stall is slow, not lost
+    assert inj.injected["stall"] == 1
+
+
+# --- exception-safety regression ---------------------------------------------------
+
+def test_harvest_raise_does_not_strand_other_launches(net):
+    """An organically corrupted buffer mid-harvest recovers per launch: the
+    other in-flight launches harvest normally and the failed launch's frames
+    re-enqueue in order (the pre-fault driver stranded everything)."""
+    fr = _frames(net, 8)
+    d = FrameDriver(net, max_batch=4, base_key=KEY, salt=9)
+    rids = d.submit(fr)
+    d.step(block=False)                              # launch A (rids 0-3)
+    d.step(block=False)                              # launch B (rids 4-7)
+    assert d.in_flight == 2
+    # corrupt launch A's device buffer organically (no injector involved)
+    d._inflight[0].post = np.full_like(np.asarray(d._inflight[0].post), np.nan)
+    out = d.harvest()
+    # launch B's frames came through untouched
+    assert sorted(out) == rids[4:]
+    assert all(np.all(np.isfinite(p)) for p, _ in out.values())
+    # launch A's frames were re-enqueued at the front, original order
+    assert [rid for rid, _ in d._queue] == rids[:4]
+    assert len(d.launch_failures) == 1
+    assert d.launch_failures[0].kind == "invalid"
+    # and the fleet is fully servable afterwards
+    rest = d.drain()
+    assert sorted(rest) == rids[:4]
+    assert all(np.all(np.isfinite(p)) for p, _ in rest.values())
+
+
+def test_recovery_restores_submit_timestamps_and_metrics(net):
+    from repro.obs import MetricsRegistry, Tracer
+
+    fr = _frames(net, 4)
+    tr, mx = Tracer(), MetricsRegistry()
+    d = FrameDriver(
+        net, max_batch=4, base_key=KEY, salt=10,
+        fault=_FaultOnTickets("drop", {0}), trace=tr, metrics=mx,
+    )
+    rids = d.submit(fr)
+    out = d.drain()
+    assert sorted(out) == rids
+    snap = mx.as_dict()
+    assert snap["counters"]["launch_failures"] == 1
+    assert snap["counters"]["launch_failures_drop"] == 1
+    assert snap["counters"]["redispatched_frames"] == 4
+    assert snap["counters"]["frames_out"] == 4
+    # every span opened for the failed launch was closed (error-annotated)
+    assert all(s.done for s in tr.spans)
+
+
+def test_launch_fault_exception_carries_identity():
+    e = LaunchFault("drop", 7, "gone")
+    assert e.kind == "drop" and e.ticket == 7
+    assert "launch 7" in str(e) and "drop" in str(e)

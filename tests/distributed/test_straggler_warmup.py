@@ -1,0 +1,99 @@
+"""StragglerWatch warmup: mean-seeded EWMA, no flagging during warmup.
+
+The legacy watch seeded its EWMA with the very first observation, so a slow
+first step (jit compile, cold cache) inflated the baseline and masked real
+stragglers until the EWMA decayed.  ``warmup_steps`` collects the first N
+observations without flagging and seeds the EWMA with their mean;
+``warmup_steps=1`` is exactly the legacy behaviour.
+"""
+
+import pytest
+
+from repro.distributed.fault import StragglerWatch
+
+
+def test_warmup_collects_without_flagging_and_mean_seeds():
+    w = StragglerWatch(threshold=3.0, warmup_steps=3)
+    assert not w.observe(0, 10.0)       # cold outlier: not flagged
+    assert w.ewma is None               # still warming up
+    assert not w.observe(1, 1.0)
+    assert w.ewma is None
+    assert not w.observe(2, 1.0)
+    assert w.ewma == pytest.approx(4.0)  # mean(10, 1, 1), not 10
+
+
+def test_warmup_steps_one_is_legacy_first_obs_seed():
+    w = StragglerWatch(threshold=3.0, alpha=0.2, warmup_steps=1)
+    assert not w.observe(0, 2.0)
+    assert w.ewma == pytest.approx(2.0)  # first observation seeds directly
+    assert w.observe(1, 7.0)             # 7 > 3*2: flagged
+    assert w.flagged_steps == [1]
+    assert w.ewma == pytest.approx(2.0)  # flagged outliers excluded from EWMA
+
+
+def test_cold_first_step_no_longer_masks_stragglers():
+    # One cold step (10x), then warm steady state, then a genuine 12x
+    # straggler.  Legacy seeding masks it; warmup seeding catches it.
+    trace = [10.0, 1.0, 1.0, 1.0, 12.0]
+
+    legacy = StragglerWatch(threshold=3.0, warmup_steps=1)
+    for i, dt in enumerate(trace):
+        legacy.observe(i, dt)
+    assert legacy.flagged_steps == []    # the bug: baseline poisoned at 10
+
+    fixed = StragglerWatch(threshold=3.0, warmup_steps=4)
+    for i, dt in enumerate(trace):
+        fixed.observe(i, dt)
+    assert fixed.flagged_steps == [4]    # mean-seeded at 3.25; 12 > 9.75
+
+
+def test_warmup_flagging_resumes_after_seed():
+    w = StragglerWatch(threshold=3.0, warmup_steps=2)
+    w.observe(0, 1.0)
+    w.observe(1, 1.0)
+    assert w.ewma == pytest.approx(1.0)
+    assert w.observe(2, 5.0)
+    assert w.flagged_steps == [2]
+
+
+def test_min_dt_is_the_steady_state_floor():
+    # min_dt excludes the seed (where a jit compile hides) and flagged
+    # stragglers -- it is the optimistic launch estimate deadline admission
+    # uses, so contamination here would shed healthy tenants.
+    w = StragglerWatch(threshold=3.0, alpha=0.2, warmup_steps=1)
+    w.observe(0, 8.0)                    # compile-sized seed
+    assert w.min_dt is None              # the seed is not a steady-state obs
+    w.observe(1, 0.005)
+    assert w.min_dt == pytest.approx(0.005)
+    w.observe(2, 30.0)                   # straggler: flagged, excluded
+    assert w.flagged_steps == [2]
+    assert w.min_dt == pytest.approx(0.005)
+    w.observe(3, 0.003)
+    assert w.min_dt == pytest.approx(0.003)
+
+
+def test_warmup_steps_validation():
+    with pytest.raises(ValueError, match="warmup_steps"):
+        StragglerWatch(warmup_steps=0)
+
+
+def test_warmup_observations_count_in_metrics():
+    class Reg:
+        def __init__(self):
+            self.counts = {}
+            self.obs = []
+
+        def inc(self, name, n=1):
+            self.counts[name] = self.counts.get(name, 0) + n
+
+        def observe(self, name, v, **kw):
+            self.obs.append((name, v))
+
+    reg = Reg()
+    w = StragglerWatch(threshold=3.0, warmup_steps=2, metrics=reg)
+    w.observe(0, 1.0)
+    w.observe(1, 1.0)
+    w.observe(2, 9.0)
+    assert reg.counts["watch_steps"] == 3
+    assert reg.counts["watch_slow_steps"] == 1   # warmup never counts as slow
+    assert len(reg.obs) == 3                     # but every interval is recorded

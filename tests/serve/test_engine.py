@@ -65,6 +65,44 @@ def test_pending_queue_admits_as_slots_free(engine_setup):
     assert reqs[3].admit_step == 4, reqs[3].admit_step
 
 
+def test_pending_queue_churn_preserves_order_and_never_starves(engine_setup):
+    """Repeated overflow churn: waves of requests arriving mid-flight must be
+    admitted in submission order (admit_step non-decreasing across the
+    submission sequence) and every request must finish -- no starvation, no
+    queue-jumping, however often the pending queue refills."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=2, t_cache=96))
+    waves = [
+        [Request(rid=10 * w + i, prompt=np.arange(3 + i), max_new_tokens=1 + (i % 3))
+         for i in range(3)]
+        for w in range(3)
+    ]
+    submitted = []
+    eng.add_requests(waves[0])
+    submitted += waves[0]
+    logits = eng.prefill_all()
+    key = jax.random.PRNGKey(4)
+    steps = 0
+    while any(s is not None for s in eng.slots) or eng.pending:
+        if steps == 2:
+            eng.add_requests(waves[1])
+            submitted += waves[1]
+        if steps == 4:
+            eng.add_requests(waves[2])
+            submitted += waves[2]
+        key, sub = jax.random.split(key)
+        logits, _ = eng.step(sub, logits)
+        steps += 1
+        assert steps < 100, "engine churn did not converge -- starvation"
+    for r in submitted:
+        assert r.done and len(r.out_tokens) == r.max_new_tokens, r.rid
+        assert r.admit_step >= 0, f"rid {r.rid} was never admitted"
+    # admission follows submission order: no later request is granted a slot
+    # before an earlier one (equal steps = same admission round, still fair)
+    admit_steps = [r.admit_step for r in submitted]
+    assert admit_steps == sorted(admit_steps), admit_steps
+
+
 def test_midflight_add_requests_gets_prefilled(engine_setup):
     """A request added while the engine is decoding must not seize a free slot
     without a cache refresh -- step() admits it with a re-prefill."""

@@ -1,0 +1,300 @@
+"""BayesRouter: multi-tenant serving, deadlines, chaos, degradation, breaker.
+
+The fleet-level contracts under test:
+
+* **bit-identity** -- with injection off, a router tenant's posteriors equal
+  a standalone per-scenario FrameDriver's for the same ``(base_key, salt)``.
+* **never-drop** -- under seeded launch-fault chaos across a mixed workload,
+  every submitted frame terminates in exactly one of OK / DEGRADED /
+  UNRELIABLE / REJECTED.
+* **deadline-aware admission** -- expired/infeasible requests shed with an
+  explicit REJECTED, and the pending queue dispatches in deadline order,
+  not FIFO.
+* **degradation & breaker** -- overload walks the n_bits ladder and flags
+  DEGRADED; consecutive failures trip a per-tenant circuit breaker.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bayesnet import FrameDriver, by_name, compile_network
+from repro.bayesnet.reliability import TERMINAL_STATUSES
+from repro.distributed.fault import LaunchFaultInjector
+from repro.obs import MetricsRegistry
+from repro.serve import BayesRouter, RouterPolicy, tenant_salt
+
+KEY = jax.random.PRNGKey(42)
+FAST = dict(backoff_base_s=1e-4, backoff_cap_s=2e-3, breaker_cooldown_s=0.01)
+
+
+def _frames(name, n, seed=0):
+    spec = by_name(name)
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2, size=(n, len(spec.evidence)), dtype=np.int32)
+
+
+# --- bit-identity (acceptance criterion) -------------------------------------------
+
+def test_router_bit_identical_to_standalone_driver():
+    name = "sensor-degradation"
+    frames = _frames(name, 6)
+    r = BayesRouter(RouterPolicy(), KEY, n_bits=128, max_batch=4)
+    rids = r.submit(name, frames)
+    res = r.drain()
+
+    d = FrameDriver(
+        compile_network(by_name(name), 128),
+        max_batch=4, base_key=KEY, salt=tenant_salt(name),
+    )
+    d.submit(frames)
+    ref = d.drain()
+    for i, rid in enumerate(rids):
+        assert res[rid].status == "OK"
+        np.testing.assert_array_equal(np.asarray(res[rid].post), ref[i][0])
+        assert res[rid].accepted == ref[i][1]
+
+
+def test_tenant_entropy_isolation():
+    # two tenants of the same spec (custom salts) draw disjoint entropy
+    frames = _frames("sensor-degradation", 4)
+    spec = by_name("sensor-degradation")
+    r = BayesRouter(RouterPolicy(), KEY, n_bits=128, max_batch=4)
+    r.register(spec, salt=1)
+    import dataclasses as _dc
+
+    spec_b = _dc.replace(spec, name="sensor-degradation-b")
+    r.register(spec_b, salt=2)
+    ra = r.submit("sensor-degradation", frames)
+    rb = r.submit("sensor-degradation-b", frames)
+    res = r.drain()
+    assert any(
+        not np.array_equal(np.asarray(res[a].post), np.asarray(res[b].post))
+        for a, b in zip(ra, rb)
+    )
+
+
+# --- chaos (acceptance criterion) --------------------------------------------------
+
+def test_chaos_every_frame_terminates_exactly_once():
+    inj = LaunchFaultInjector(
+        seed=3, p_drop=0.02, p_stall=0.01, p_corrupt=0.02, stall_ms=2.0
+    )
+    mx = MetricsRegistry()
+    r = BayesRouter(
+        RouterPolicy(**FAST), KEY, n_bits=64, max_batch=4, fault=inj, metrics=mx
+    )
+    submitted = []
+    for i, name in enumerate(
+        ["sensor-degradation", "pedestrian-night", "lane-change"]
+    ):
+        submitted += r.submit(name, _frames(name, 5, seed=i))
+    out = r.drain()
+    assert sorted(out) == sorted(submitted)          # zero lost frames
+    assert sorted(r.results) == sorted(submitted)    # exactly one terminal each
+    for res in out.values():
+        assert res.status in TERMINAL_STATUSES
+    assert sum(r.status_counts().values()) == len(submitted)
+
+
+def test_total_device_failure_still_terminates():
+    inj = LaunchFaultInjector(seed=0, p_drop=1.0)
+    r = BayesRouter(
+        RouterPolicy(max_redispatch=1, breaker_threshold=2, **FAST),
+        KEY, n_bits=64, max_batch=4, fault=inj,
+    )
+    rids = r.submit("sensor-degradation", _frames("sensor-degradation", 4))
+    out = r.drain()
+    assert sorted(out) == rids
+    for rid in rids:
+        assert out[rid].status == "UNRELIABLE"       # flagged, never dropped
+        assert out[rid].accepted == 0
+
+
+# --- deadline-aware admission ------------------------------------------------------
+
+def test_expired_deadline_sheds_rejected_immediately():
+    r = BayesRouter(RouterPolicy(), KEY, n_bits=64, max_batch=4)
+    rids = r.submit(
+        "sensor-degradation", _frames("sensor-degradation", 3), deadline_ms=-1.0
+    )
+    for rid in rids:                                 # shed at submit, no pump
+        assert r.results[rid].status == "REJECTED"
+        assert r.results[rid].post is None
+    assert r.pending == 0
+    assert r.drain() == {rid: r.results[rid] for rid in rids}
+
+
+def test_pending_queue_is_deadline_ordered_not_fifo():
+    r = BayesRouter(RouterPolicy(), KEY, n_bits=64, max_batch=1)
+    fr = _frames("sensor-degradation", 1)
+    late = r.submit("sensor-degradation", fr, deadline_ms=60_000)[0]
+    soon = r.submit("sensor-degradation", fr, deadline_ms=10_000)[0]
+    r.drain()
+    # the later-submitted, earlier-deadline request dispatched first
+    assert r.requests[soon].dispatch_seq < r.requests[late].dispatch_seq
+
+
+def test_infeasible_request_sheds_instead_of_queuing():
+    r = BayesRouter(RouterPolicy(**FAST), KEY, n_bits=64, max_batch=4)
+    name = r.register("sensor-degradation")
+    import time
+
+    r.tenant(name).breaker_open_until = time.perf_counter() + 30.0
+    rids = r.submit(name, _frames(name, 2), deadline_ms=50.0)
+    for rid in rids:                                 # cannot be served in time
+        assert r.results[rid].status == "REJECTED"
+
+
+# --- graceful degradation ----------------------------------------------------------
+
+def test_overload_degrades_along_nbits_ladder():
+    pol = RouterPolicy(capacity=2, max_degrade=2, min_n_bits=32, **FAST)
+    r = BayesRouter(pol, KEY, n_bits=512, max_batch=4)
+    name = "sensor-degradation"
+    rids = r.submit(name, _frames(name, 9))
+    out = r.drain()
+    t = r.tenant(name)
+    levels = {out[rid].degrade_level for rid in rids}
+    assert max(levels) == 2                          # 9 pending // 2 capacity -> 2
+    assert all(out[rid].status == "DEGRADED" for rid in rids)
+    assert t.n_bits_for(1) == 128 and t.n_bits_for(2) == 32
+    for level, drv in t.drivers.items():
+        assert drv.net.n_bits == t.n_bits_for(level)
+
+
+def test_nominal_load_never_degrades():
+    r = BayesRouter(RouterPolicy(), KEY, n_bits=64, max_batch=4)
+    rids = r.submit("sensor-degradation", _frames("sensor-degradation", 4))
+    out = r.drain()
+    assert all(out[rid].status == "OK" for rid in rids)
+    assert all(out[rid].degrade_level == 0 for rid in rids)
+
+
+def test_degrade_ladder_floors_and_collapses():
+    pol = RouterPolicy(capacity=1, max_degrade=2, min_n_bits=128, **FAST)
+    r = BayesRouter(pol, KEY, n_bits=128, max_batch=4)
+    name = r.register("sensor-degradation")
+    t = r.tenant(name)
+    # every rung floors to the base n_bits: the "degraded" driver IS level 0
+    _, eff = t.driver(2)
+    assert eff == 0 and list(t.drivers) == [0]
+
+
+# --- failure response --------------------------------------------------------------
+
+class _Switchable(LaunchFaultInjector):
+    """Chaos with an off switch: drop everything while ``on`` is set."""
+
+    def __init__(self):
+        super().__init__()
+        self.on = True
+
+    def draw(self, *ids):
+        if self.on:
+            self.injected["drop"] += 1
+            return "drop"
+        return None
+
+
+def test_breaker_trips_then_recovers():
+    inj = _Switchable()
+    mx = MetricsRegistry()
+    r = BayesRouter(
+        RouterPolicy(breaker_threshold=2, max_redispatch=2, **FAST),
+        KEY, n_bits=64, max_batch=4, fault=inj, metrics=mx,
+    )
+    name = "sensor-degradation"
+    bad = r.submit(name, _frames(name, 3))
+    out = r.drain()
+    t = r.tenant(name)
+    assert t.trips >= 1
+    assert all(out[rid].status == "UNRELIABLE" for rid in bad)
+    assert mx.count("router_breaker_trips") == t.trips
+    # device heals: the half-open probe succeeds and the breaker closes
+    inj.on = False
+    good = r.submit(name, _frames(name, 3, seed=1))
+    out = r.drain()
+    assert all(out[rid].status == "OK" for rid in good)
+    assert not t.breaker_open
+    assert t.consecutive_failures == 0
+    assert mx.count("router_breaker_closes") >= 1
+
+
+def test_backoff_gates_redispatch():
+    import time
+
+    r = BayesRouter(RouterPolicy(**FAST), KEY, n_bits=64, max_batch=4)
+    name = r.register("sensor-degradation")
+    t = r.tenant(name)
+    t.consecutive_failures = 3
+    t.not_before = time.perf_counter() + 30.0
+    rids = r.submit(name, _frames(name, 2), deadline_ms=120_000)
+    r.pump()
+    assert all(r.requests[rid].dispatch_seq == -1 for rid in rids)  # held back
+    assert r.pending == 2                                           # still queued
+    t.not_before = 0.0
+    out = r.drain()
+    assert all(out[rid].status == "OK" for rid in rids)
+
+
+# --- plan cache / tenants ----------------------------------------------------------
+
+def test_lru_evicts_idle_tenants_only_and_salts_persist():
+    r = BayesRouter(
+        RouterPolicy(), KEY, n_bits=64, max_batch=4, max_cached_tenants=2
+    )
+    r.register("sensor-degradation", salt=123)
+    r.register("pedestrian-night")
+    r.register("lane-change")
+    assert len(r._tenants) == 2
+    assert "sensor-degradation" not in r._tenants    # LRU victim
+    # a tenant with frames in its driver is never evicted
+    import time
+
+    r.submit("pedestrian-night", _frames("pedestrian-night", 2))
+    r._admit(time.perf_counter())                    # frames now held by the tenant
+    r.register("intersection")
+    assert "pedestrian-night" in r._tenants
+    assert "lane-change" not in r._tenants           # the idle one went instead
+    r.drain()
+    # the evicted tenant's salt survives re-registration
+    r.register("sensor-degradation")
+    assert r.tenant("sensor-degradation").salt == 123
+
+
+def test_harvest_pops_fresh_results_once():
+    r = BayesRouter(RouterPolicy(), KEY, n_bits=64, max_batch=4)
+    rids = r.submit("sensor-degradation", _frames("sensor-degradation", 2))
+    out = r.drain()
+    assert sorted(out) == rids
+    assert r.harvest() == {}                         # fresh set was consumed
+    assert sorted(r.results) == rids                 # accounting keeps them
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="deadline_mult"):
+        RouterPolicy(deadline_mult=0)
+    with pytest.raises(ValueError, match="degrade_step"):
+        RouterPolicy(degrade_step=1)
+    with pytest.raises(ValueError, match="breaker_threshold"):
+        RouterPolicy(breaker_threshold=0)
+    with pytest.raises(ValueError, match="max_cached_tenants"):
+        BayesRouter(max_cached_tenants=0)
+
+
+def test_metrics_and_status_accounting():
+    mx = MetricsRegistry()
+    r = BayesRouter(RouterPolicy(), KEY, n_bits=64, max_batch=4, metrics=mx)
+    name = "sensor-degradation"
+    rids = r.submit(name, _frames(name, 3))
+    r.submit(name, _frames(name, 1), deadline_ms=-1.0)
+    r.drain()
+    assert mx.count("router_submitted") == 4
+    assert mx.count("router_ok") == 3
+    assert mx.count("router_rejected") == 1
+    assert f"router_{name}_frame_ms" in mx.histograms
+    counts = r.status_counts()
+    assert counts["OK"] == 3 and counts["REJECTED"] == 1
+    for rid in rids:
+        assert r.results[rid].deadline_met
