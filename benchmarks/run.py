@@ -7,12 +7,14 @@ so the perf trajectory accumulates one artifact per run.
 
 from __future__ import annotations
 
+import os
 import sys
 
 
 def main() -> None:
     from benchmarks import (
         bench_bayesnet,
+        bench_drift,
         bench_fig1_device,
         bench_fig2_logic,
         bench_fig3_inference,
@@ -36,11 +38,16 @@ def main() -> None:
         bench_bayesnet,
         bench_reliability,
         bench_serve,
+        bench_drift,
         bench_latency,
         bench_roofline,
     ):
         print(f"# --- {mod.__name__} ---")
         mod.run()
+    report = bench_drift.write_drift_report(
+        os.path.join(out_dir, "drift_report.csv")
+    )
+    print(f"# wrote {report}")
     path = common.write_json(out_dir)
     print(f"# wrote {path}")
 

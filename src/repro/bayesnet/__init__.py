@@ -19,11 +19,23 @@ stochastic domain (DESIGN.md SS8-SS10).
                   (binary quartet + categorical trio)
     driver.py     serve-style continuous batching of evidence frames, with
                   non-blocking dispatch (step(block=False) / drain_async),
-                  power-of-two launch buckets for short tails, and
-                  confidence-gated retry with escalating n_bits (retry=)
+                  power-of-two launch buckets for short tails,
+                  confidence-gated retry with escalating n_bits (retry=),
+                  online drift monitoring (drift=) and between-launch
+                  hot-swap of recalibrated plans (swap_net)
+    calibrate.py  calibrate-back loop: CPT fitting from synthetic detection
+                  rollouts, drift-compensated threshold programming, and
+                  hot recalibration of live drivers (DESIGN §15)
 """
 
 from repro.bayesnet.analytic import make_posterior_fn, sample_evidence  # noqa: F401
+from repro.bayesnet.calibrate import (  # noqa: F401
+    calibration_report,
+    compensated_program,
+    fit_scene_config,
+    recalibrate_driver,
+    recalibrated_network,
+)
 from repro.bayesnet.compile import (  # noqa: F401
     CompiledNetwork,
     compile_network,
@@ -33,6 +45,12 @@ from repro.bayesnet.compile import (  # noqa: F401
 from repro.bayesnet.driver import FrameDriver  # noqa: F401
 from repro.bayesnet.noise import NoiseModel, perturbed_cdf_rows  # noqa: F401
 from repro.bayesnet.reliability import (  # noqa: F401
+    HEALTH_DRIFTING,
+    HEALTH_HEALTHY,
+    HEALTH_RECALIBRATING,
+    HEALTH_STATES,
+    DriftMonitor,
+    DriftPolicy,
     FrameReport,
     ReliabilityStats,
     RetryPolicy,

@@ -46,6 +46,7 @@ import numpy as np
 from repro.bayesnet.noise import NoiseModel, perturbed_cdf_rows
 from repro.bayesnet.spec import NetworkSpec
 from repro.core import rng
+from repro.kernels.net_sweep.common import epoch_word_bounds
 
 _MAX_STATES = 1 << 20
 
@@ -87,6 +88,10 @@ def joint_table(
     spec: NetworkSpec,
     dac_quantize: bool = False,
     noise: NoiseModel | None = None,
+    *,
+    drift_epochs: int = 1,
+    program: dict | None = None,
+    n_bits: int | None = None,
 ):
     """Returns (states (S, N) int32, joint (S,) float32), S = prod(cards).
 
@@ -94,7 +99,20 @@ def joint_table(
     the fastest-cycling mixed-radix digit, the k-ary generalisation of the
     old bit grid); ``joint`` is the exact probability of each assignment.
     ``noise`` enumerates the *perturbed* network (see module docstring).
+
+    ``drift_epochs=E > 1`` is the oracle twin of the epoched sweep: the joint
+    is the *mixture* ``sum_e w_e * joint_e`` of the per-epoch perturbed
+    joints (epoch ``e`` at ``noise.with_cycle(noise.cycle + e)``), with
+    ``w_e`` each epoch's exact share of the packed words when ``n_bits`` is
+    given (:func:`~repro.kernels.net_sweep.common.epoch_word_bounds`) and
+    uniform otherwise.  The sweep's count-ratio estimator sums counts across
+    all epochs of the stream, so its large-``n_bits`` limit is exactly the
+    posterior of this mixed joint.  ``program`` matches the compiler's
+    programmed-threshold override.
     """
+    drift_epochs = int(drift_epochs)
+    if drift_epochs > 1 and noise is None:
+        raise ValueError("drift_epochs > 1 needs a NoiseModel to advance")
     cards = spec.cards()
     total = math.prod(cards)
     if total > _MAX_STATES:
@@ -102,22 +120,43 @@ def joint_table(
             f"enumeration oracle capped at {_MAX_STATES} joint states, got {total}"
         )
     idx = {node.name: j for j, node in enumerate(spec.nodes)}
-    perturbed = perturbed_cdf_rows(spec, noise) if noise is not None else None
     s = np.arange(total, dtype=np.int64)
     cols = []
     for c in cards:
         cols.append((s % c).astype(np.int32))
         s //= c
     states = jnp.asarray(np.stack(cols, axis=-1))
-    joint = jnp.ones((total,), jnp.float32)
-    for node in spec.nodes:
-        cpt = jnp.asarray(_node_rows(spec, node.name, dac_quantize, perturbed))
-        # Mixed-radix CPT row index: first parent is the most significant
-        # digit (spec.py convention).
-        row = jnp.zeros((total,), jnp.int32)
-        for parent in node.parents:
-            row = row * jnp.int32(spec.card(parent)) + states[:, idx[parent]]
-        joint = joint * cpt[row, states[:, idx[node.name]]]
+
+    def one_epoch_joint(perturbed):
+        joint = jnp.ones((total,), jnp.float32)
+        for node in spec.nodes:
+            cpt = jnp.asarray(_node_rows(spec, node.name, dac_quantize, perturbed))
+            # Mixed-radix CPT row index: first parent is the most significant
+            # digit (spec.py convention).
+            row = jnp.zeros((total,), jnp.int32)
+            for parent in node.parents:
+                row = row * jnp.int32(spec.card(parent)) + states[:, idx[parent]]
+            joint = joint * cpt[row, states[:, idx[node.name]]]
+        return joint
+
+    if noise is None and program is None:
+        return states, one_epoch_joint(None)
+    if drift_epochs == 1:
+        return states, one_epoch_joint(
+            perturbed_cdf_rows(spec, noise, program=program)
+        )
+    if n_bits is not None:
+        bounds = epoch_word_bounds(n_bits // 32, drift_epochs)
+        spans = np.diff(bounds).astype(np.float64)
+        weights = spans / max(spans.sum(), 1.0)
+    else:
+        weights = np.full((drift_epochs,), 1.0 / drift_epochs)
+    joint = jnp.zeros((total,), jnp.float32)
+    for e, w_e in enumerate(weights):
+        pe = perturbed_cdf_rows(
+            spec, noise.with_cycle(noise.cycle + e), program=program
+        )
+        joint = joint + jnp.float32(w_e) * one_epoch_joint(pe)
     return states, joint
 
 
@@ -127,6 +166,10 @@ def make_posterior_fn(
     evidence: Sequence[str] | None = None,
     dac_quantize: bool = False,
     noise: NoiseModel | None = None,
+    *,
+    drift_epochs: int = 1,
+    program: dict | None = None,
+    n_bits: int | None = None,
 ) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]:
     """Compile the exact batched-posterior function for a spec.
 
@@ -137,11 +180,17 @@ def make_posterior_fn(
     marginal (0 where impossible; the posterior then falls back to 0.5 /
     uniform).  ``noise`` builds the perturbed-CPT oracle twin of
     ``compile_network(noise=...)`` -- exact ground truth for the noisy
-    program (see module docstring).
+    program (see module docstring).  ``drift_epochs`` / ``program`` /
+    ``n_bits`` mirror the compiler's epoched calibrate-back lowering: the
+    oracle becomes the exact word-weighted epoch mixture the swept stream's
+    count-ratio estimator converges to (see :func:`joint_table`).
     """
     queries = tuple(queries if queries is not None else spec.queries)
     evidence = tuple(evidence if evidence is not None else spec.evidence)
-    states, joint = joint_table(spec, dac_quantize=dac_quantize, noise=noise)
+    states, joint = joint_table(
+        spec, dac_quantize=dac_quantize, noise=noise,
+        drift_epochs=drift_epochs, program=program, n_bits=n_bits,
+    )
     ev_cols = jnp.asarray([spec.index(e) for e in evidence], jnp.int32)
     q_cols = jnp.asarray([spec.index(q) for q in queries], jnp.int32)
     q_cards = tuple(spec.card(q) for q in queries)

@@ -242,6 +242,11 @@ class CompiledNetwork:
     n_shards: int = 1
     shard_axes: Tuple[str, ...] = ()
     noise: NoiseModel | None = None
+    # Within-launch drift epochs baked into the plan (1 = frozen snapshot)
+    # and the programmed-threshold override the plan was lowered from
+    # (calibrate-back compensation; None = clean spec thresholds).
+    drift_epochs: int = 1
+    program: dict | None = dataclasses.field(default=None, repr=False, compare=False)
 
     def _check_frames(self, ev_frames) -> jnp.ndarray:
         ev = jnp.asarray(ev_frames, jnp.int32)
@@ -275,6 +280,9 @@ def sweep_plan(
     queries: Sequence[str],
     evidence: Sequence[str],
     noise: NoiseModel | None = None,
+    *,
+    drift_epochs: int = 1,
+    program: dict | None = None,
 ) -> SweepPlan:
     """Lower a spec to the static :class:`SweepPlan` the fused kernel consumes.
 
@@ -286,10 +294,25 @@ def sweep_plan(
     threshold through the crossbar non-ideality model
     (:mod:`repro.bayesnet.noise`) before it is baked into the plan --
     ``noise=None`` produces exactly the clean plan.
+
+    ``drift_epochs=E > 1`` models the read-noise snapshot advancing *within*
+    one launch: epoch ``e`` re-perturbs the thresholds at
+    ``noise.with_cycle(noise.cycle + e)`` and the sweep applies each epoch's
+    rows to its share of the word axis (:func:`~repro.kernels.net_sweep.common.
+    epoch_word_bounds`).  ``drift_epochs=1`` produces exactly the
+    single-snapshot plan.  ``program`` overrides the programmed thresholds
+    fed into the perturbation (calibrate-back compensation, see
+    :func:`~repro.bayesnet.noise.perturbed_cdf_rows`).
     """
+    drift_epochs = int(drift_epochs)
+    if drift_epochs > 1 and noise is None:
+        raise ValueError("drift_epochs > 1 needs a NoiseModel to advance")
     order = spec.topo_order()
     index = {name: i for i, name in enumerate(order)}
-    perturbed = perturbed_cdf_rows(spec, noise) if noise is not None else None
+    perturbed = (
+        perturbed_cdf_rows(spec, noise, program=program)
+        if noise is not None or program is not None else None
+    )
     nodes = []
     for name in order:
         node = spec.node(name)
@@ -298,10 +321,18 @@ def sweep_plan(
         else:
             rows = tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name))
         nodes.append((tuple(index[p] for p in node.parents), spec.card(name), rows))
+    epoch_rows = []
+    for e in range(1, drift_epochs):
+        pe = perturbed_cdf_rows(
+            spec, noise.with_cycle(noise.cycle + e), program=program
+        )
+        epoch_rows.append(tuple(pe[name] for name in order))
     return SweepPlan(
         nodes=tuple(nodes),
         evidence=tuple(index[e] for e in evidence),
         queries=tuple(index[q] for q in queries),
+        epochs=drift_epochs,
+        epoch_rows=tuple(epoch_rows),
     )
 
 
@@ -313,6 +344,7 @@ def lower_streams(
     *,
     mux_mode: str = "gather",
     noise: NoiseModel | None = None,
+    program: dict | None = None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ):
@@ -331,10 +363,15 @@ def lower_streams(
     Binary nodes feed the perturbed threshold back as ``t / 256`` -- exact in
     float32, so the encoder's ``round(p * 256)`` recovers ``t`` bit-for-bit
     and the two lowerings keep sampling the identical perturbed network.
-    ``noise=None`` leaves every code path untouched.
+    ``noise=None`` leaves every code path untouched.  ``program`` overrides
+    the programmed thresholds fed into the perturbation (calibrate-back
+    compensation); with both ``None`` nothing changes.
     """
     order = spec.topo_order()
-    perturbed = perturbed_cdf_rows(spec, noise) if noise is not None else None
+    perturbed = (
+        perturbed_cdf_rows(spec, noise, program=program)
+        if noise is not None or program is not None else None
+    )
     streams = {}
     for i, name in enumerate(order):
         node = spec.node(name)
@@ -433,6 +470,8 @@ def compile_network(
     fused: bool | None = None,
     mux_mode: str = "gather",
     noise: NoiseModel | None = None,
+    drift_epochs: int = 1,
+    program: dict | None = None,
     devices: int | None = None,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
@@ -477,8 +516,8 @@ def compile_network(
             net = compile_network(
                 spec, n_bits, queries, evidence, share_entropy=share_entropy,
                 estimator=estimator, fused=fused, mux_mode=mux_mode,
-                noise=noise, devices=devices, use_kernel=use_kernel,
-                interpret=interpret,
+                noise=noise, drift_epochs=drift_epochs, program=program,
+                devices=devices, use_kernel=use_kernel, interpret=interpret,
             )
             sp.attrs.update(network_stats(net))
             return net
@@ -499,6 +538,20 @@ def compile_network(
         )
     if noise is not None and not isinstance(noise, NoiseModel):
         raise TypeError(f"noise must be a NoiseModel or None, got {type(noise)!r}")
+    drift_epochs = int(drift_epochs)
+    if drift_epochs < 1:
+        raise ValueError(f"drift_epochs must be >= 1, got {drift_epochs}")
+    if drift_epochs > n_bits // 32:
+        raise ValueError(
+            f"drift_epochs={drift_epochs} exceeds the {n_bits // 32} packed "
+            f"words of n_bits={n_bits} (an epoch owns at least one word)"
+        )
+    if drift_epochs > 1 and noise is None:
+        raise ValueError("drift_epochs > 1 needs a NoiseModel to advance")
+    if program is not None:
+        unknown = set(program) - set(spec.topo_order())
+        if unknown:
+            raise ValueError(f"program covers unknown nodes {sorted(unknown)}")
     q_cards = tuple(spec.card(q) for q in queries)
     assemble = _slot_assembler(q_cards)
     # The fused sweep samples with threshold-gather by construction, so a
@@ -519,10 +572,18 @@ def compile_network(
             "programs draw batch-shaped entropy that is not bit-reproducible "
             "across shard boundaries"
         )
+    if drift_epochs > 1 and not fused:
+        raise ValueError(
+            "drift_epochs > 1 requires the fused lowering: the per-node "
+            "unfused encoders sample one threshold snapshot per stream"
+        )
     mask = bitops.pad_mask(n_bits)
 
     if fused:
-        plan = sweep_plan(spec, queries, evidence, noise=noise)
+        plan = sweep_plan(
+            spec, queries, evidence, noise=noise,
+            drift_epochs=drift_epochs, program=program,
+        )
         assemble_counts = _count_assembler(q_cards)
         mesh, shard_axes = _resolve_frame_mesh(devices)
         n_shards = (
@@ -577,7 +638,7 @@ def compile_network(
             share_entropy=share_entropy, estimator=estimator, fused=True,
             query_cards=q_cards, _run=_run, _decide=_decide,
             n_shards=n_shards, shard_axes=shard_axes if mesh is not None else (),
-            noise=noise,
+            noise=noise, drift_epochs=drift_epochs, program=program,
         )
 
     def slot_indicators(streams):
@@ -640,8 +701,8 @@ def compile_network(
         b = ev_frames.shape[0]
         streams = lower_streams(
             spec, key, n_bits, batch=None if share_entropy else b,
-            mux_mode=mux_mode, noise=noise, use_kernel=use_kernel,
-            interpret=interpret,
+            mux_mode=mux_mode, noise=noise, program=program,
+            use_kernel=use_kernel, interpret=interpret,
         )
         ev_planes = tuple(streams[e] for e in evidence)
         slots = slot_indicators(streams)
@@ -669,4 +730,5 @@ def compile_network(
         spec=spec, queries=queries, evidence=evidence, n_bits=n_bits,
         share_entropy=share_entropy, estimator=estimator, fused=False,
         query_cards=q_cards, _run=_run, _decide=_decide, noise=noise,
+        program=program,
     )

@@ -95,6 +95,19 @@ A frame that fails ``max_redispatch`` launches is emitted with a zero
 posterior, ``accepted=0`` and a ``reliable=False`` report -- the never-drop
 invariant extends to failing hardware: every submitted frame terminates.
 ``fault=None`` with healthy buffers is bit-identical to the pre-fault driver.
+
+**Drift monitoring + hot-swap.**  ``drift=DriftMonitor(...)`` feeds every
+harvested launch's mean decision confidence and accept-rate into the
+monitor's CUSUM detectors (:mod:`repro.bayesnet.reliability`), so a driver
+notices its own crossbar aging without an oracle in the loop.  The
+complementary actuator is :meth:`swap_net`: replace the compiled program
+*between launches* -- typically with a recalibrated twin from
+:mod:`repro.bayesnet.calibrate` -- without dropping or reordering a single
+frame.  Every in-flight launch harvests against the plan it dispatched with
+(device buffers and the stream length are snapshotted per launch at
+dispatch), queued frames simply ride the next launch on the new plan, and
+the launch counter keeps advancing so entropy stays disjoint across the
+swap.  ``drift=None`` (default) costs nothing on the hot path.
 """
 
 from __future__ import annotations
@@ -110,6 +123,7 @@ import numpy as np
 
 from repro.bayesnet.compile import CompiledNetwork, compile_network
 from repro.bayesnet.reliability import (
+    DriftMonitor,
     FrameReport,
     ReliabilityStats,
     RetryPolicy,
@@ -134,6 +148,7 @@ class _InFlight:
     lspan: Optional[int]             # launch span id
     dspan: Optional[int]             # device span id
     t_dispatch: Optional[float]      # dispatch wall-clock
+    n_bits: int                      # stream length of the plan that dispatched
     fault: Optional[str] = None      # injected fault kind, if any
     hspan: Optional[int] = None      # harvest span id (opened at harvest)
 
@@ -169,6 +184,7 @@ class FrameDriver:
         metrics: MetricsRegistry | None = None,
         fault: LaunchFaultInjector | None = None,
         max_redispatch: int = 3,
+        drift: DriftMonitor | None = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -176,10 +192,13 @@ class FrameDriver:
             raise TypeError(f"retry must be a RetryPolicy or None, got {type(retry)!r}")
         if max_redispatch < 0:
             raise ValueError(f"max_redispatch must be >= 0, got {max_redispatch}")
+        if drift is not None and not isinstance(drift, DriftMonitor):
+            raise TypeError(f"drift must be a DriftMonitor or None, got {type(drift)!r}")
         self.net = net
         self.max_batch = int(max_batch)
         self.retry = retry
         self.fault = fault
+        self.drift = drift
         self.max_redispatch = int(max_redispatch)
         self.launch_failures: List[LaunchFailure] = []
         self._fail_counts: Dict[int, int] = {}   # rid -> failed launches so far
@@ -245,6 +264,51 @@ class FrameDriver:
         """Dispatched launches whose results have not been harvested yet."""
         return len(self._inflight)
 
+    @property
+    def launches(self) -> int:
+        """Launches dispatched so far -- doubles as the crossbar cycle estimate."""
+        return self._launches
+
+    # -------------------------------------------------------------- hot-swap
+    def swap_net(self, net: CompiledNetwork) -> None:
+        """Replace the compiled program between launches -- zero frame loss.
+
+        The recalibration actuator: swap in a re-lowered twin of the current
+        network (same evidence columns, same query layout; typically
+        :func:`repro.bayesnet.calibrate.recalibrated_network`) while the
+        driver keeps serving.  Ordering guarantees:
+
+        * every **in-flight** launch harvests against the plan it dispatched
+          with -- its device buffers and stream length were snapshotted into
+          the launch record at dispatch, so posteriors of pre-swap launches
+          are bit-identical to a never-swapped driver's;
+        * **queued** frames (main or retry) simply ride the next launch on
+          the new plan, in their original order -- nothing is dropped,
+          re-ordered, or re-keyed;
+        * the launch counter keeps advancing, so post-swap launches draw
+          entropy disjoint from every pre-swap launch.
+
+        Escalated retry programs are recompiled lazily against the new
+        network (the per-attempt cache is reset).
+        """
+        if not isinstance(net, CompiledNetwork):
+            raise TypeError(f"swap_net needs a CompiledNetwork, got {type(net)!r}")
+        if tuple(net.evidence) != tuple(self.net.evidence):
+            raise ValueError(
+                f"swap_net evidence mismatch: {net.evidence} != {self.net.evidence}"
+            )
+        if tuple(net.query_cards) != tuple(self.net.query_cards):
+            raise ValueError(
+                "swap_net query layout mismatch: "
+                f"{net.query_cards} != {self.net.query_cards}"
+            )
+        self.net = net
+        self._nets = {0: net}
+        if self.metrics is not None:
+            self.metrics.inc("net_swaps")
+        if self.trace is not None:
+            self.trace.event("swap_net", n_bits=net.n_bits)
+
     # ----------------------------------------------------------------- serve
     def _next_key(self) -> jax.Array:
         key = jax.random.fold_in(self._base_key, self._launches)
@@ -285,6 +349,7 @@ class FrameDriver:
                 share_entropy=self.net.share_entropy,
                 estimator=self.net.estimator, fused=self.net.fused,
                 noise=self.net.noise, devices=1, trace=self.trace,
+                drift_epochs=self.net.drift_epochs, program=self.net.program,
             )
         return self._nets[attempt]
 
@@ -363,7 +428,7 @@ class FrameDriver:
             mx.set_gauge("pending", len(self._queue))
         self._inflight.append(
             _InFlight(ticket, taken, attempt, post, accepted, lspan, dspan,
-                      t_dispatch, fault=injected)
+                      t_dispatch, net.n_bits, fault=injected)
         )
         return ticket
 
@@ -446,14 +511,27 @@ class FrameDriver:
             raise LaunchFault("invalid", lf.ticket, "negative accepted count")
         t_now = time.perf_counter() if mx is not None else None
         emitted: List[int] = []
+        n_real = len(taken)
+        n_bits = lf.n_bits   # snapshot from dispatch: immune to swap_net
+        conf = None
+        if self.retry is not None or self.drift is not None:
+            conf = decision_confidence(post[:n_real], accepted[:n_real])
+        if self.drift is not None:
+            self.drift.observe_launch(
+                float(np.mean(conf)),
+                float(np.mean(accepted[:n_real])) / max(n_bits, 1),
+            )
         if self.retry is None:
             for i, (rid, _, _, _) in enumerate(taken):
                 out[rid] = (post[i], int(accepted[i]))
                 emitted.append(rid)
         else:
-            n_real = len(taken)
-            conf = decision_confidence(post[:n_real], accepted[:n_real])
-            n_bits = (self.net if attempt == 0 else self._nets[attempt]).n_bits
+            base = self.net.n_bits
+            clamped = bool(
+                attempt > 0
+                and self.retry.n_bits_for(base, attempt)
+                < base * self.retry.escalation ** attempt
+            )
             for i, (rid, row, _, bits_before) in enumerate(taken):
                 total = bits_before + n_bits
                 ok = bool(conf[i] >= self.retry.min_confidence)
@@ -476,10 +554,13 @@ class FrameDriver:
                 self.reports[rid] = FrameReport(
                     confidence=float(conf[i]), attempts=attempt + 1,
                     n_bits=n_bits, total_bits=total, reliable=ok,
+                    escalation_clamped=clamped,
                 )
                 self.stats.record_frame(float(conf[i]), attempt, total, ok)
                 if mx is not None and not ok:
                     mx.inc("flagged_unreliable")
+                if mx is not None and clamped:
+                    mx.inc("escalation_clamped")
         if mx is not None:
             mx.inc("frames_out", len(emitted))
             if lf.t_dispatch is not None:

@@ -60,7 +60,7 @@ import numpy as np
 
 from repro.bayesnet.spec import NetworkSpec
 from repro.core import rng
-from repro.core.device import DEFAULT_PARAMS, MemristorParams
+from repro.core.device import DEFAULT_PARAMS, MemristorParams, wear_scale
 
 _U32 = np.uint32
 
@@ -118,6 +118,10 @@ class NoiseModel:
     p_stuck_off: float = 5e-4
     seed: int = 0
     cycle: int = 0
+    # Endurance-wear time constant in read epochs: the effective read CV at
+    # epoch c is read_cv * wear_scale(c, wear_tau) -- derived, not ad hoc
+    # (:attr:`~repro.core.device.MemristorParams.wear_tau_epochs`).
+    wear_tau: float = DEFAULT_PARAMS.wear_tau_epochs
 
     def __post_init__(self):
         for f in ("d2d_cv", "read_cv", "ir_drop", "p_stuck_on", "p_stuck_off"):
@@ -129,6 +133,10 @@ class NoiseModel:
             raise ValueError(f"ir_drop {self.ir_drop} >= 1 inverts thresholds")
         if self.p_stuck_on + self.p_stuck_off > 1.0:
             raise ValueError("p_stuck_on + p_stuck_off > 1")
+        wt = float(self.wear_tau)
+        if not wt > 0.0 or not math.isfinite(wt):
+            raise ValueError(f"NoiseModel.wear_tau must be finite and > 0, got {wt}")
+        object.__setattr__(self, "wear_tau", wt)
         object.__setattr__(self, "seed", int(self.seed))
         object.__setattr__(self, "cycle", int(self.cycle))
 
@@ -139,7 +147,7 @@ class NoiseModel:
     ) -> "NoiseModel":
         """Paper-calibrated model from a device-parameter set."""
         return cls(d2d_cv=params.d2d_cv, read_cv=params.read_cv,
-                   seed=seed, cycle=cycle)
+                   seed=seed, cycle=cycle, wear_tau=params.wear_tau_epochs)
 
     @classmethod
     def zero(cls, seed: int = 0) -> "NoiseModel":
@@ -165,7 +173,55 @@ class NoiseModel:
         return (self.d2d_cv == 0.0 and self.read_cv == 0.0 and self.ir_drop == 0.0
                 and self.p_stuck_on == 0.0 and self.p_stuck_off == 0.0)
 
+    def read_cv_at(self, cycle: int | None = None) -> float:
+        """Effective read CV at ``cycle`` (default: this model's own cycle).
+
+        The calibrated fresh-device ``read_cv`` grows with endurance wear as
+        ``wear_scale(cycle, wear_tau)`` (:mod:`repro.core.device`): exactly
+        ``read_cv`` at cycle 0, doubling in variance every ``wear_tau``
+        epochs.  This is the only cycle-dependent *magnitude* in the model --
+        the d2d spread, IR droop, and stuck map are properties of the array,
+        not of the epoch.
+        """
+        c = self.cycle if cycle is None else int(cycle)
+        return self.read_cv * wear_scale(c, self.wear_tau)
+
     # ------------------------------------------------------------ perturbation
+    def error_factors(
+        self, name: str, l: int, k1: int, node_pos: int, n_nodes: int
+    ) -> np.ndarray:
+        """The ``(l, k1)`` multiplicative conductance error of one node's array.
+
+        The deterministic part of the perturbation -- d2d lognormal x
+        wear-scaled read lognormal x IR droop -- BEFORE grid rounding, stuck
+        faults, and re-monotonisation.  Exposed separately so calibrate-back
+        (:mod:`repro.bayesnet.calibrate`) can divide it out of the programmed
+        thresholds: ``perturb_rows(rows / factors) ~ rows`` up to one DAC step
+        plus the stuck devices nothing can compensate.
+        """
+        f = np.ones((l, k1), np.float64)
+        if l * k1 == 0:
+            return f
+        dev = np.arange(l * k1, dtype=np.uint32).reshape(l, k1)
+        nh = zlib.crc32(name.encode("utf-8"))
+        if self.d2d_cv > 0.0:
+            sg = math.sqrt(math.log1p(self.d2d_cv**2))
+            dev_key = _fold(self.seed, nh, 0x0D2D)
+            f = f * np.exp(sg * _normals(dev_key, dev) - 0.5 * sg * sg)
+        rc = self.read_cv_at()
+        if rc > 0.0:
+            sr = math.sqrt(math.log1p(rc**2))
+            read_key = _fold(self.seed, nh, 0x0C2C, self.cycle)
+            f = f * np.exp(sr * _normals(read_key, dev) - 0.5 * sr * sr)
+        if self.ir_drop > 0.0:
+            # Word/bit-line voltage divider: devices further down either line
+            # see less of the programming voltage; linear droop per axis,
+            # worst case (far corner) = 1 - ir_drop.
+            word = (node_pos + 1) / max(n_nodes, 1)
+            bit = (dev.astype(np.float64) + 1.0) / float(l * k1)
+            f = f * (1.0 - self.ir_drop * 0.5 * (word + bit))
+        return f
+
     def perturb_rows(
         self,
         name: str,
@@ -187,27 +243,11 @@ class NoiseModel:
         if self.is_zero:
             return tuple(tuple(int(x) for x in row) for row in clean_rows)
         l, k1 = t.shape
-        dev = np.arange(l * k1, dtype=np.uint32).reshape(l, k1)
-        nh = zlib.crc32(name.encode("utf-8"))
-        dev_key = _fold(self.seed, nh, 0x0D2D)
-        read_key = _fold(self.seed, nh, 0x0C2C, self.cycle)
-        stuck_key = _fold(self.seed, nh, 0x057C)
-        out = t
-        if self.d2d_cv > 0.0:
-            sg = math.sqrt(math.log1p(self.d2d_cv**2))
-            out = out * np.exp(sg * _normals(dev_key, dev) - 0.5 * sg * sg)
-        if self.read_cv > 0.0:
-            sr = math.sqrt(math.log1p(self.read_cv**2))
-            out = out * np.exp(sr * _normals(read_key, dev) - 0.5 * sr * sr)
-        if self.ir_drop > 0.0:
-            # Word/bit-line voltage divider: devices further down either line
-            # see less of the programming voltage; linear droop per axis,
-            # worst case (far corner) = 1 - ir_drop.
-            word = (node_pos + 1) / max(n_nodes, 1)
-            bit = (dev.astype(np.float64) + 1.0) / float(l * k1)
-            out = out * (1.0 - self.ir_drop * 0.5 * (word + bit))
+        out = t * self.error_factors(name, l, k1, node_pos, n_nodes)
         out = np.clip(np.rint(out), 0.0, 256.0)
         if self.p_stuck_on > 0.0 or self.p_stuck_off > 0.0:
+            dev = np.arange(l * k1, dtype=np.uint32).reshape(l, k1)
+            stuck_key = _fold(self.seed, zlib.crc32(name.encode("utf-8")), 0x057C)
             u = _uniforms(stuck_key, dev)
             out = np.where(u < self.p_stuck_on, 256.0, out)
             out = np.where(
@@ -221,8 +261,19 @@ class NoiseModel:
         return tuple(tuple(int(x) for x in row) for row in out)
 
 
+def _sanitize_rows(rows) -> Tuple[Tuple[int, ...], ...]:
+    """Clip to the DAC grid and re-monotonise programmed rows (no noise)."""
+    t = np.asarray(rows, np.float64)
+    if t.size == 0:
+        return tuple(tuple(int(x) for x in r) for r in rows)
+    t = np.minimum.accumulate(np.clip(np.rint(t), 0.0, 256.0), axis=1)
+    return tuple(tuple(int(x) for x in row) for row in t)
+
+
 def perturbed_cdf_rows(
-    spec: NetworkSpec, noise: NoiseModel
+    spec: NetworkSpec,
+    noise: NoiseModel | None,
+    program: Dict[str, Tuple[Tuple[int, ...], ...]] | None = None,
 ) -> Dict[str, Tuple[Tuple[int, ...], ...]]:
     """Perturbed integer CDF rows for every node of ``spec``, keyed by name.
 
@@ -233,10 +284,23 @@ def perturbed_cdf_rows(
     Wordline positions follow topological order (the fused plan's node
     numbering), but the random draws key on the node *name*, so any caller
     iterating in any order sees the identical perturbed array.
+
+    ``program`` optionally overrides the *programmed* thresholds of named
+    nodes before perturbation -- the calibrate-back hook: a compensated
+    program divides the deterministic error factors out so the perturbed
+    array lands back on the intended grid.  Nodes absent from ``program``
+    use the clean spec thresholds; with ``noise=None`` the programmed rows
+    are returned as-is (clipped / re-monotonised).
     """
     order = spec.topo_order()
     out: Dict[str, Tuple[Tuple[int, ...], ...]] = {}
     for pos, name in enumerate(order):
-        clean = tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name))
-        out[name] = noise.perturb_rows(name, clean, pos, len(order))
+        if program is not None and name in program:
+            base = tuple(tuple(int(t) for t in r) for r in program[name])
+        else:
+            base = tuple(rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name))
+        if noise is None:
+            out[name] = _sanitize_rows(base)
+        else:
+            out[name] = noise.perturb_rows(name, base, pos, len(order))
     return out

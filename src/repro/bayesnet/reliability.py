@@ -34,6 +34,19 @@ emitted with its best-effort posterior and ``reliable=False`` in its
 wall-time watchdog, bit budget) so benchmarks can report retry overhead next
 to flip-rate; :func:`flip_rate` scores decision stability against a
 reference.
+
+**Drift.**  :class:`DriftMonitor` watches the *slow* failure mode the retry
+policy cannot see: crossbar read noise growing with endurance wear degrades
+every launch a little, so per-frame confidence gating just retries more and
+more while the programmed thresholds walk away from the CPTs.  The monitor
+runs one :class:`~repro.distributed.fault.CusumDetector` per launch-level
+statistic -- mean decision confidence (drop = drift), acceptance rate
+(drop), and optionally an externally supplied flip-vs-expected rate (rise)
+-- and escalates a health state machine HEALTHY -> DRIFTING ->
+RECALIBRATING.  RECALIBRATING latches until :meth:`DriftMonitor.reset`
+(after a calibrate-back plan swap, :mod:`repro.bayesnet.calibrate`).  The
+whole monitor is a pure function of its observation sequence, so a seeded
+chaos replay reproduces every score and state transition exactly.
 """
 
 from __future__ import annotations
@@ -44,7 +57,17 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.distributed.fault import CusumDetector
+
 _erf = np.vectorize(math.erf, otypes=[np.float64])
+
+# Per-tenant crossbar health states (DriftMonitor, DESIGN.md §15): DRIFTING
+# de-escalates if the statistics recover; RECALIBRATING latches until a
+# calibrate-back swap resets the monitor.
+HEALTH_HEALTHY = "HEALTHY"
+HEALTH_DRIFTING = "DRIFTING"
+HEALTH_RECALIBRATING = "RECALIBRATING"
+HEALTH_STATES = (HEALTH_HEALTHY, HEALTH_DRIFTING, HEALTH_RECALIBRATING)
 
 # Terminal frame statuses of the fleet-level serving tier
 # (:class:`~repro.serve.router.BayesRouter`): every submitted frame ends in
@@ -161,6 +184,12 @@ class FrameReport:
     attempts (the frame's whole entropy bill).  ``reliable`` is False only
     when the retry budget ran out below ``min_confidence`` -- the posterior
     is still the best-effort final attempt, never dropped.
+
+    ``escalation_clamped`` flags the retry/degradation collision: the frame's
+    escalation schedule asked for more bits than its (degraded) driver's
+    ceiling allows, so an attempt ran shorter than the policy's nominal
+    ladder -- the serve router clamps ``max_n_bits`` to the tenant's current
+    rung rather than silently re-inflating a degraded tenant's launch cost.
     """
 
     confidence: float
@@ -168,6 +197,7 @@ class FrameReport:
     n_bits: int
     total_bits: int
     reliable: bool
+    escalation_clamped: bool = False
 
 
 @dataclasses.dataclass
@@ -253,3 +283,159 @@ class ReliabilityStats:
             ),
             "escalations": {str(k): v for k, v in sorted(self.escalations.items())},
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftPolicy:
+    """Knobs of the online drift detector (see module docstring).
+
+    ``warmup`` launches establish each statistic's baseline (a fresh or
+    freshly recalibrated array defines "healthy"); ``cusum_k`` is the CUSUM
+    slack in baseline sigmas (sub-``k``-sigma wander decays, sustained
+    larger shifts accumulate ~linearly); ``drift_h`` / ``recal_h`` are the
+    score thresholds for the DRIFTING flag and the RECALIBRATING latch --
+    with a sustained ``s``-sigma shift the monitor escalates after roughly
+    ``recal_h / (s - cusum_k)`` launches, so the defaults trip on a 2-sigma
+    drift within ~5 launches while one noisy launch (bounded score gain)
+    never can.
+    """
+
+    warmup: int = 8
+    cusum_k: float = 0.5
+    drift_h: float = 3.0
+    recal_h: float = 8.0
+    min_std: float = 1e-3
+    ewma_alpha: float = 0.2
+
+    def __post_init__(self):
+        if self.warmup < 1:
+            raise ValueError(f"warmup must be >= 1, got {self.warmup}")
+        if self.drift_h <= 0 or self.recal_h < self.drift_h:
+            raise ValueError(
+                f"need 0 < drift_h <= recal_h, got {self.drift_h}/{self.recal_h}"
+            )
+        if self.cusum_k < 0:
+            raise ValueError(f"cusum_k must be >= 0, got {self.cusum_k}")
+
+
+#: statistic name -> CUSUM direction (+1 alarms on rise, -1 on drop)
+DRIFT_STATISTICS = {"confidence": -1, "accept_rate": -1, "flip": 1}
+
+
+class DriftMonitor:
+    """Online crossbar-health monitor over per-launch statistics.
+
+    One :class:`~repro.distributed.fault.CusumDetector` per statistic of
+    :data:`DRIFT_STATISTICS`; the health state is driven by the *peak*
+    detector score: ``>= recal_h`` latches RECALIBRATING (cleared only by
+    :meth:`reset`, i.e. an actual calibrate-back swap), ``>= drift_h`` flags
+    DRIFTING, and a DRIFTING flag de-escalates if the scores decay back
+    below ``drift_h``.  The driver feeds ``confidence`` / ``accept_rate``
+    per harvested launch (:class:`~repro.bayesnet.driver.FrameDriver`
+    ``drift=``); the flip detector is fed by callers that hold a reference
+    decision stream (:meth:`observe_flip`), since a live harvest has no
+    oracle.  ``metrics`` routes scores/state into a
+    :class:`~repro.obs.MetricsRegistry` (gauges ``drift_score_<stat>`` and
+    ``drift_state``, counters ``drift_launches`` / ``drift_alarms``),
+    prefixed with ``<name>_`` when a tenant name is given.
+    """
+
+    def __init__(self, policy: DriftPolicy | None = None, metrics=None,
+                 name: str | None = None):
+        self.policy = policy if policy is not None else DriftPolicy()
+        if not isinstance(self.policy, DriftPolicy):
+            raise TypeError(f"policy must be a DriftPolicy, got {type(policy)!r}")
+        self.metrics = metrics
+        self.name = name
+        p = self.policy
+        self.detectors = {
+            stat: CusumDetector(
+                k=p.cusum_k, direction=direction, warmup=p.warmup,
+                min_std=p.min_std, alpha=p.ewma_alpha,
+            )
+            for stat, direction in DRIFT_STATISTICS.items()
+        }
+        self.state = HEALTH_HEALTHY
+        self.launches = 0
+        self.alarms = 0
+        self.resets = 0
+
+    def _prefix(self, key: str) -> str:
+        return f"{self.name}_{key}" if self.name else key
+
+    def observe_launch(
+        self, confidence: float, accept_rate: float,
+        flip: float | None = None,
+    ) -> str:
+        """Fold one harvested launch's statistics; returns the health state."""
+        self.launches += 1
+        self.detectors["confidence"].observe(confidence)
+        self.detectors["accept_rate"].observe(accept_rate)
+        if flip is not None:
+            self.detectors["flip"].observe(flip)
+        if self.metrics is not None:
+            self.metrics.inc(self._prefix("drift_launches"))
+        return self._update_state()
+
+    def observe_flip(self, flip: float) -> str:
+        """Fold one flip-vs-expected observation (caller-supplied reference)."""
+        self.detectors["flip"].observe(flip)
+        return self._update_state()
+
+    def _update_state(self) -> str:
+        peak = self.peak_score
+        if self.state != HEALTH_RECALIBRATING:
+            if peak >= self.policy.recal_h:
+                self.state = HEALTH_RECALIBRATING
+                self.alarms += 1
+            elif peak >= self.policy.drift_h:
+                if self.state != HEALTH_DRIFTING:
+                    self.alarms += 1
+                self.state = HEALTH_DRIFTING
+            else:
+                self.state = HEALTH_HEALTHY
+        if self.metrics is not None:
+            for stat, det in self.detectors.items():
+                self.metrics.set_gauge(
+                    self._prefix(f"drift_score_{stat}"), det.score
+                )
+            self.metrics.set_gauge(
+                self._prefix("drift_state"), float(HEALTH_STATES.index(self.state))
+            )
+            if self.state != HEALTH_HEALTHY:
+                self.metrics.inc(self._prefix("drift_alarms"))
+        return self.state
+
+    @property
+    def peak_score(self) -> float:
+        return max(det.score for det in self.detectors.values())
+
+    def reset(self, full: bool = False) -> None:
+        """Clear the RECALIBRATING latch after a calibrate-back plan swap.
+
+        ``full=True`` also discards the warmup baselines, so the freshly
+        swapped plan defines a new "healthy" operating point (use when the
+        recalibration changes the expected statistics, e.g. a different
+        n_bits rung).
+        """
+        for det in self.detectors.values():
+            det.reset(keep_baseline=not full)
+        self.state = HEALTH_HEALTHY
+        self.resets += 1
+        if self.metrics is not None:
+            self.metrics.inc(self._prefix("drift_resets"))
+            self.metrics.set_gauge(self._prefix("drift_state"), 0.0)
+
+    def as_dict(self) -> Dict[str, float]:
+        """Flat JSON-friendly snapshot for bench emission."""
+        out = {
+            "state": self.state,
+            "launches": self.launches,
+            "alarms": self.alarms,
+            "resets": self.resets,
+            "peak_score": self.peak_score,
+        }
+        for stat, det in self.detectors.items():
+            out[f"score_{stat}"] = det.score
+            out[f"ewma_{stat}"] = det.ewma if det.ewma is not None else 0.0
+        return out

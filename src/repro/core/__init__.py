@@ -2,7 +2,7 @@
 
 from repro.core import bitops, cordiv, correlation, device, fusion, graph, inference, latency, logic, rng, sne  # noqa: F401
 from repro.core.cordiv import cordiv_fill, cordiv_ratio, cordiv_scan, make_superset  # noqa: F401
-from repro.core.device import DEFAULT_PARAMS, MemristorParams  # noqa: F401
+from repro.core.device import DEFAULT_PARAMS, MemristorParams, wear_scale  # noqa: F401
 from repro.core.fusion import bayes_fusion, detection_fusion, fuse_analytic  # noqa: F401
 from repro.core.inference import analytic_posterior, bayes_inference, bayes_inference_marginal  # noqa: F401
 from repro.core.logic import Corr, prob_and, prob_mux, prob_or, prob_xor  # noqa: F401

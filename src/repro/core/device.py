@@ -77,6 +77,40 @@ class MemristorParams:
         """
         return (self.vth_sigma / self.vth_mu) / float(np.sqrt(self.reads_per_bit))
 
+    @property
+    def wear_tau_epochs(self) -> float:
+        """Read epochs until endurance wear doubles the read-noise *variance*.
+
+        Two measured ingredients, no free constants:
+
+        * The OU fit (:func:`fit_ou` / ``ou_theta``): inter-epoch V_th
+          correlation decays as ``(1 - theta)^n`` over the ``reads_per_bit``
+          switching cycles one read epoch spans -- ``(1 - 0.35)^80 ~ 1e-15``
+          -- so successive :meth:`~repro.bayesnet.noise.NoiseModel.with_cycle`
+          epochs are *independent* re-draws, which is exactly how the noise
+          model re-keys them.
+        * The endurance trace (Fig 1e, :func:`endurance_trace`): degradation
+          accumulates as a variance random walk that reaches the fresh-device
+          read variance after ``endurance_cycles`` switching events; in read
+          epochs that is ``endurance_cycles / reads_per_bit``.
+        """
+        return self.endurance_cycles / self.reads_per_bit
+
+
+def wear_scale(cycle: float, tau: float) -> float:
+    """Endurance-wear multiplier on the per-read threshold CV at ``cycle``.
+
+    Fresh-device read variance plus a linearly accumulating wear term:
+    ``sqrt(1 + cycle / tau)``, with ``tau`` in read epochs
+    (:attr:`MemristorParams.wear_tau_epochs`).  Exactly ``1.0`` at
+    ``cycle <= 0`` so a fresh array reproduces the calibrated ``read_cv``
+    bit-for-bit.
+    """
+    c = float(cycle)
+    if c <= 0.0:
+        return 1.0
+    return float(np.sqrt(1.0 + c / float(tau)))
+
 
 DEFAULT_PARAMS = MemristorParams()
 

@@ -141,6 +141,76 @@ class StragglerWatch:
         return slow
 
 
+class CusumDetector:
+    """One-sided CUSUM over a streaming statistic, with a warmup baseline.
+
+    The classic change-point accumulator: the first ``warmup`` observations
+    fix a baseline mean/std (never alarmed on), after which each observation
+    is standardised, oriented (``direction=+1`` accumulates upward shifts,
+    ``-1`` downward), and folded as ``S = max(0, S + z * direction - k)``.
+    ``k`` is the slack in baseline sigmas -- drifts smaller than ``k`` decay
+    back to zero, sustained larger shifts grow ``S`` linearly -- so callers
+    compare :attr:`score` against their own thresholds (the
+    :class:`~repro.bayesnet.reliability.DriftMonitor` uses two: alarm and
+    escalate).  An :attr:`ewma` of the raw statistic rides along for
+    telemetry.  The whole state is a pure function of the observation
+    sequence -- no clocks, no RNG -- so a seeded chaos replay reproduces
+    every score and alarm bit-for-bit.
+    """
+
+    def __init__(
+        self,
+        k: float = 0.5,
+        direction: int = 1,
+        warmup: int = 8,
+        min_std: float = 1e-3,
+        alpha: float = 0.2,
+    ):
+        if warmup < 1:
+            raise ValueError(f"warmup must be >= 1, got {warmup}")
+        if direction not in (1, -1):
+            raise ValueError(f"direction must be +1 or -1, got {direction}")
+        self.k = float(k)
+        self.direction = int(direction)
+        self.warmup = int(warmup)
+        self.min_std = float(min_std)
+        self.alpha = float(alpha)
+        self.score = 0.0
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.baseline_mean: Optional[float] = None
+        self.baseline_std: Optional[float] = None
+        self._warm: list[float] = []
+
+    def observe(self, x: float) -> float:
+        """Fold one observation; returns the updated CUSUM score."""
+        x = float(x)
+        self.n += 1
+        self.ewma = x if self.ewma is None else (
+            (1 - self.alpha) * self.ewma + self.alpha * x
+        )
+        if self.baseline_mean is None:
+            self._warm.append(x)
+            if len(self._warm) >= self.warmup:
+                self.baseline_mean = float(np.mean(self._warm))
+                self.baseline_std = max(float(np.std(self._warm)), self.min_std)
+                self._warm = []
+            return self.score
+        z = (x - self.baseline_mean) / self.baseline_std
+        self.score = max(0.0, self.score + z * self.direction - self.k)
+        return self.score
+
+    def reset(self, keep_baseline: bool = True) -> None:
+        """Zero the accumulator; optionally restart the warmup baseline too."""
+        self.score = 0.0
+        if not keep_baseline:
+            self.baseline_mean = None
+            self.baseline_std = None
+            self.ewma = None
+            self.n = 0
+            self._warm = []
+
+
 #: fault kinds a :class:`LaunchFaultInjector` can inject, in draw order
 LAUNCH_FAULTS = ("drop", "stall", "corrupt")
 

@@ -1,3 +1,7 @@
-from repro.kernels.net_sweep.common import SweepPlan, decide_counts  # noqa: F401
+from repro.kernels.net_sweep.common import (  # noqa: F401
+    SweepPlan,
+    decide_counts,
+    epoch_word_bounds,
+)
 from repro.kernels.net_sweep.ops import net_sweep  # noqa: F401
 from repro.kernels.net_sweep.ref import net_sweep_ref  # noqa: F401

@@ -59,6 +59,36 @@ def _normalize_node(entry):
     return (tuple(parents), int(card), tuple(tuple(int(t) for t in r) for r in rows))
 
 
+def _check_rows(i: int, card: int, n_expect: int, rows) -> None:
+    """Shared CDF-row validation for base and epoch rows of one node."""
+    if len(rows) != n_expect:
+        raise ValueError(f"node {i}: needs {n_expect} CPT rows, got {len(rows)}")
+    for row in rows:
+        if len(row) != card - 1:
+            raise ValueError(f"node {i}: CDF row {row} needs {card - 1} thresholds")
+        prev = 256
+        for t in row:
+            if not 0 <= t <= 256:
+                raise ValueError(f"node {i}: threshold {t} outside [0, 256]")
+            if t > prev:
+                raise ValueError(f"node {i}: CDF thresholds {row} not non-increasing")
+            prev = t
+
+
+def epoch_word_bounds(w_words: int, epochs: int) -> Tuple[int, ...]:
+    """Word-index partition of a launch's bit-stream into drift epochs.
+
+    ``epochs + 1`` non-decreasing bounds: epoch ``e`` owns words
+    ``[bounds[e], bounds[e+1])``.  Maximally even split, earlier epochs take
+    the remainder -- a pure function of ``(w_words, epochs)`` shared by the
+    sweep lowering and the analytic oracle's mixture weights so both sides
+    weight each epoch by exactly the bits it emits.
+    """
+    if epochs < 1:
+        raise ValueError(f"epochs must be >= 1, got {epochs}")
+    return tuple(round(e * w_words / epochs) for e in range(epochs + 1))
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepPlan:
     """Static lowering of a k-ary DAG network for the fused sweep.
@@ -75,11 +105,24 @@ class SweepPlan:
     queries:  node index per posterior output; each query of cardinality k
               contributes ``k - 1`` numerator slots (values ``1 .. k-1``; the
               value-0 count is ``denom`` minus their sum).
+    epochs:   within-launch drift epochs.  The word axis is split by
+              :func:`epoch_word_bounds`; words of epoch ``e > 0`` compare
+              against ``epoch_rows[e - 1]`` instead of the base rows --
+              modelling the crossbar's read-noise snapshot advancing *during*
+              one launch.  Entropy is untouched (the counter layout never
+              sees epochs), so ``epochs=1`` is bit-identical to the
+              pre-drift plan by construction.
+    epoch_rows: ``epochs - 1`` entries, each a per-node tuple of threshold
+              row tuples with the same shape as that node's base ``rows``
+              (same parents, same cardinality -- only the programmed
+              thresholds drift).
     """
 
     nodes: Tuple
     evidence: Tuple[int, ...]
     queries: Tuple[int, ...]
+    epochs: int = 1
+    epoch_rows: Tuple = ()
 
     def __post_init__(self):
         object.__setattr__(
@@ -87,6 +130,16 @@ class SweepPlan:
         )
         object.__setattr__(self, "evidence", tuple(self.evidence))
         object.__setattr__(self, "queries", tuple(self.queries))
+        object.__setattr__(self, "epochs", int(self.epochs))
+        object.__setattr__(
+            self,
+            "epoch_rows",
+            tuple(
+                tuple(tuple(tuple(int(t) for t in row) for row in node_rows)
+                      for node_rows in per_epoch)
+                for per_epoch in self.epoch_rows
+            ),
+        )
         for i, (parents, card, rows) in enumerate(self.nodes):
             if card < 2:
                 raise ValueError(f"node {i}: cardinality {card} < 2")
@@ -100,25 +153,27 @@ class SweepPlan:
                     f"{tuple(self.nodes[p][1] for p in parents)} need {expect} "
                     f"CPT rows, got {len(rows)}"
                 )
-            for row in rows:
-                if len(row) != card - 1:
-                    raise ValueError(
-                        f"node {i}: CDF row {row} needs {card - 1} thresholds"
-                    )
-                prev = 256
-                for t in row:
-                    if not 0 <= t <= 256:
-                        raise ValueError(f"node {i}: threshold {t} outside [0, 256]")
-                    if t > prev:
-                        raise ValueError(
-                            f"node {i}: CDF thresholds {row} not non-increasing"
-                        )
-                    prev = t
+            _check_rows(i, card, expect, rows)
         for n in self.evidence + self.queries:
             if not 0 <= n < len(self.nodes):
                 raise ValueError(f"evidence/query node {n} out of range")
         if not self.queries:
             raise ValueError("SweepPlan needs at least one query node")
+        if self.epochs < 1:
+            raise ValueError(f"epochs must be >= 1, got {self.epochs}")
+        if len(self.epoch_rows) != self.epochs - 1:
+            raise ValueError(
+                f"epochs={self.epochs} needs {self.epochs - 1} epoch_rows "
+                f"entries, got {len(self.epoch_rows)}"
+            )
+        for e, per_epoch in enumerate(self.epoch_rows):
+            if len(per_epoch) != len(self.nodes):
+                raise ValueError(
+                    f"epoch {e + 1}: rows for {len(per_epoch)} nodes, "
+                    f"plan has {len(self.nodes)}"
+                )
+            for i, node_rows in enumerate(per_epoch):
+                _check_rows(i, self.nodes[i][1], len(self.nodes[i][2]), node_rows)
 
     # ------------------------------------------------------------- accessors
     def card(self, i: int) -> int:
@@ -143,6 +198,10 @@ class SweepPlan:
             offs.append(off)
             off += self.nodes[q][1] - 1
         return tuple(offs)
+
+    def node_rows(self, n: int, epoch: int = 0) -> Tuple:
+        """CDF rows of node ``n`` in drift epoch ``epoch`` (0 = base rows)."""
+        return self.nodes[n][2] if epoch == 0 else self.epoch_rows[epoch - 1][n]
 
 
 class _RowSetGather:
@@ -253,6 +312,50 @@ def _level_masks(rows, level, gather, l):
     return masks, hi
 
 
+def _combine_epochs(per_epoch, emasks):
+    """OR of per-epoch threshold-bit masks restricted to their word ranges.
+
+    ``per_epoch[e]`` is one epoch's mask (None / ``_ONES`` / word) and
+    ``emasks[e]`` the full-ones-where-epoch-``e`` word for the tile.  The
+    emasks partition every tile position, so all-None stays None and
+    all-``_ONES`` stays ``_ONES`` -- the static short-circuits (and with them
+    the skipped-plane optimisation) survive epoching whenever the epochs
+    agree on a bit.
+    """
+    if all(m is None for m in per_epoch):
+        return None
+    if all(m is _ONES for m in per_epoch):
+        return _ONES
+    acc = None
+    for em, m in zip(emasks, per_epoch):
+        if m is None:
+            continue
+        term = em if m is _ONES else em & m
+        acc = term if acc is None else acc | term
+    return acc
+
+
+def _epoch_level_masks(plan, n, level, gather, l, emasks):
+    """Epoch-aware :func:`_level_masks`: per-epoch rows folded under emasks.
+
+    One ``_RowSetGather`` serves every epoch of the node (digit indicators
+    and recursive row-set words are epoch-independent, so the memo is shared);
+    only the selected row sets differ per epoch.
+    """
+    per_bits = []
+    per_hi = []
+    for e in range(plan.epochs):
+        masks, hi = _level_masks(plan.node_rows(n, e), level, gather, l)
+        per_bits.append(masks)
+        per_hi.append(hi)
+    masks = [
+        _combine_epochs([per_bits[e][k] for e in range(plan.epochs)], emasks)
+        for k in range(8)
+    ]
+    hi = _combine_epochs(per_hi, emasks)
+    return masks, hi
+
+
 def decide_counts(plan: SweepPlan, numer: jnp.ndarray, denom: jnp.ndarray):
     """Decision epilogue: per-query argmax value from the count slots.
 
@@ -322,6 +425,20 @@ def sweep_tile(
     wi = jax.lax.broadcasted_iota(jnp.uint32, (bf, bw), 1)
     pos = (jnp.asarray(f0, jnp.uint32) + fi) * jnp.uint32(w_words) \
         + jnp.asarray(w0, jnp.uint32) + wi
+    emasks = None
+    if plan.epochs > 1:
+        # Epoch membership is a pure function of the *global* word index, so
+        # any tiling (and any shard) assigns identical epochs to identical
+        # positions.  Entropy is untouched: only the threshold masks switch.
+        wglob = jnp.asarray(w0, jnp.uint32) + wi
+        bounds = epoch_word_bounds(w_words, plan.epochs)
+        emasks = [
+            jnp.where(
+                (wglob >= jnp.uint32(lo)) & (wglob < jnp.uint32(hi)),
+                _FULL, jnp.uint32(0),
+            )
+            for lo, hi in zip(bounds, bounds[1:])
+        ]
     streams = []        # per node: tuple of value bit-plane words
     node_buckets = []   # per node: tuple of value==v indicator words, v=1..k-1
     for n, (parents, card, rows) in enumerate(plan.nodes):
@@ -346,7 +463,10 @@ def sweep_tile(
 
         levels = []
         for v in range(card - 1):
-            masks, hi = _level_masks(rows, v, gather, l)
+            if emasks is None:
+                masks, hi = _level_masks(rows, v, gather, l)
+            else:
+                masks, hi = _epoch_level_masks(plan, n, v, gather, l, emasks)
             levels.append(_lt_chain(plane, masks, hi, (bf, bw)))
         bks = bitops.nested_buckets(levels)
         streams.append(tuple(bitops.planes_from_buckets(bks)))

@@ -11,6 +11,13 @@
 Everything is off by default: instrumented layers take ``trace=None`` /
 ``metrics=None`` and the untouched path stays bit-identical (regression-
 tested, not assumed).
+
+The crossbar-health loop (DESIGN.md §15) publishes through the same
+registry: each :class:`~repro.bayesnet.DriftMonitor` exports per-statistic
+CUSUM gauges (``<name>_drift_score_*``, ``<name>_drift_state``) plus alarm /
+reset counters, and the router adds ``router_recalibrations`` and the
+driver ``net_swaps`` / ``escalation_clamped`` counters, so a dashboard can
+watch a tenant walk HEALTHY -> DRIFTING -> RECALIBRATING and back.
 """
 
 from repro.obs.histogram import (  # noqa: F401

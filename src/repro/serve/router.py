@@ -43,6 +43,25 @@ Every submitted frame therefore terminates in exactly one of
 silently dropped, extending the retry layer's never-drop invariant from the
 frame to the fleet.  The invariant is CI-gated under seeded 5% launch-fault
 chaos (``benchmarks/bench_serve.py``).
+
+**Crossbar health (DESIGN §15).**  ``drift=DriftPolicy(...)`` gives every
+tenant its own :class:`~repro.bayesnet.reliability.DriftMonitor`, fed by all
+its ladder-rung drivers: per-launch confidence and accept-rate run through
+CUSUM detectors and escalate a HEALTHY -> DRIFTING -> RECALIBRATING state
+machine the router consumes alongside the circuit breaker.  When a noisy
+tenant latches ``RECALIBRATING`` (and ``auto_recalibrate=True``), the next
+harvest round hot-swaps a calibrate-back twin
+(:func:`~repro.bayesnet.calibrate.recalibrated_network`, at the tenant's
+launch-counter cycle estimate) into every rung driver between launches --
+zero frames lost or reordered -- and resets the monitor.
+:meth:`BayesRouter.recalibrate` is the manual trigger,
+:meth:`BayesRouter.health` the state probe.
+
+A degradation/retry interaction is also closed here: a DEGRADED tenant's
+:class:`~repro.bayesnet.reliability.RetryPolicy` escalation is clamped to
+the rung's n_bits (a degraded rung must not escalate its way back to full
+fidelity through the retry back door); clamped frames carry
+``FrameReport.escalation_clamped``.
 """
 
 from __future__ import annotations
@@ -57,15 +76,20 @@ from typing import Dict, List, Optional, Tuple, Union
 import jax
 import numpy as np
 
+from repro.bayesnet.calibrate import recalibrated_network
 from repro.bayesnet.compile import CompiledNetwork, compile_network
 from repro.bayesnet.driver import FrameDriver
 from repro.bayesnet.noise import NoiseModel
 from repro.bayesnet.reliability import (
+    HEALTH_HEALTHY,
+    HEALTH_RECALIBRATING,
     STATUS_DEGRADED,
     STATUS_OK,
     STATUS_REJECTED,
     STATUS_UNRELIABLE,
     TERMINAL_STATUSES,
+    DriftMonitor,
+    DriftPolicy,
     RetryPolicy,
 )
 from repro.bayesnet.scenarios import by_name
@@ -186,6 +210,12 @@ class _Tenant:
         self.not_before = 0.0                  # backoff gate (abs time)
         self.breaker_open_until: Optional[float] = None
         self.trips = 0
+        # one health monitor per tenant, shared by every ladder-rung driver
+        self.monitor: Optional[DriftMonitor] = (
+            DriftMonitor(router.drift, metrics=router.metrics, name=name)
+            if router.drift is not None else None
+        )
+        self.recalibrations = 0
 
     # ------------------------------------------------------------------ plans
     def n_bits_for(self, level: int) -> int:
@@ -208,18 +238,25 @@ class _Tenant:
             r = self.router
             if r.metrics is not None:
                 r.metrics.inc("router_plan_compiles")
+            rung = self.n_bits_for(level)
             net = compile_network(
-                self.spec, self.n_bits_for(level), noise=self.noise,
-                trace=r.trace,
+                self.spec, rung, noise=self.noise, trace=r.trace,
             )
+            retry = r.retry
+            if level > 0 and retry is not None and retry.max_n_bits > rung:
+                # a DEGRADED rung must not escalate past its own fidelity
+                # cut: clamp the retry ladder to the rung's n_bits (frames
+                # that hit the clamp carry FrameReport.escalation_clamped)
+                retry = dataclasses.replace(retry, max_n_bits=rung)
             # level folds into the salt so ladder rungs draw disjoint
             # entropy; level 0 keeps the bare tenant salt -- the
             # bit-identity contract with a standalone driver
             d = FrameDriver(
                 net, max_batch=r.max_batch, base_key=r.base_key,
-                salt=self.salt + 7919 * level, retry=r.retry,
+                salt=self.salt + 7919 * level, retry=retry,
                 trace=r.trace, metrics=r.metrics, fault=r.fault,
                 max_redispatch=r.policy.max_redispatch,
+                drift=self.monitor,
             )
             self.drivers[level] = d
             self._fail_cursor[level] = 0
@@ -268,6 +305,50 @@ class _Tenant:
             self._fail_cursor[level] = len(d.launch_failures)
         return out
 
+    # ----------------------------------------------------------------- health
+    @property
+    def health(self) -> str:
+        """HEALTHY / DRIFTING / RECALIBRATING (HEALTHY when unmonitored)."""
+        return self.monitor.state if self.monitor is not None else HEALTH_HEALTHY
+
+    def cycle_estimate(self) -> int:
+        """Crossbar wear estimate: total launches across every rung driver.
+
+        One launch reads every device of the array once per stream position,
+        so the launch count is the natural unit the noise model's ``cycle``
+        axis advances in.
+        """
+        return sum(d.launches for d in self.drivers.values())
+
+    def recalibrate(self, cycle: float | None = None) -> int:
+        """Hot-swap a calibrate-back twin into every rung driver.
+
+        ``cycle=None`` uses :meth:`cycle_estimate`.  Each rung's network is
+        re-lowered at that cycle with a compensated program
+        (:func:`~repro.bayesnet.calibrate.recalibrated_network`) and swapped
+        between launches -- in-flight launches harvest against their
+        original plan, so no frame is lost or reordered.  Resets the drift
+        monitor (back to HEALTHY, baselines re-learned against the
+        recalibrated array).  Returns the cycle used.  Raises if the tenant
+        has no noise model: a clean tenant has no drift to calibrate back.
+        """
+        if self.noise is None:
+            raise ValueError(
+                f"tenant {self.name!r} has no noise model: nothing to recalibrate"
+            )
+        c = int(self.cycle_estimate() if cycle is None else cycle)
+        for drv in self.drivers.values():
+            drv.swap_net(recalibrated_network(drv.net, c))
+        self.recalibrations += 1
+        if self.monitor is not None:
+            self.monitor.reset()
+        r = self.router
+        if r.metrics is not None:
+            r.metrics.inc("router_recalibrations")
+        if r.trace is not None:
+            r.trace.event("router.recalibrate", tenant=self.name, cycle=c)
+        return c
+
 
 class BayesRouter:
     """Multi-tenant fault-tolerant frame router (module docstring).
@@ -298,10 +379,16 @@ class BayesRouter:
         trace: Tracer | None = None,
         metrics: MetricsRegistry | None = None,
         max_cached_tenants: int = 8,
+        drift: DriftPolicy | None = None,
+        auto_recalibrate: bool = True,
     ):
         if max_cached_tenants < 1:
             raise ValueError(
                 f"max_cached_tenants must be >= 1, got {max_cached_tenants}"
+            )
+        if drift is not None and not isinstance(drift, DriftPolicy):
+            raise TypeError(
+                f"drift must be a DriftPolicy or None, got {type(drift)!r}"
             )
         self.policy = policy if policy is not None else RouterPolicy()
         self.base_key = (
@@ -311,6 +398,8 @@ class BayesRouter:
         self.max_batch = int(max_batch)
         self.retry = retry
         self.fault = fault
+        self.drift = drift
+        self.auto_recalibrate = bool(auto_recalibrate)
         self.trace = trace
         if metrics is None and trace is not None:
             metrics = MetricsRegistry()
@@ -571,6 +660,15 @@ class BayesRouter:
                 # cooldown elapsed: half-open -- admission resumes, the next
                 # batch is the probe (its harvest closes or re-trips above)
                 pass
+            if (
+                self.auto_recalibrate
+                and t.monitor is not None
+                and t.noise is not None
+                and t.monitor.state == HEALTH_RECALIBRATING
+            ):
+                # the detector latched: hot-swap calibrate-back twins into
+                # every rung between launches (in-flight work unaffected)
+                t.recalibrate()
 
     def _finish(
         self, req: _Request, status: str, post, accepted: int, now: float
@@ -594,6 +692,19 @@ class BayesRouter:
                 mx.hist(
                     f"router_{req.tenant}_frame_ms", budget_ms=PAPER_BUDGET_MS
                 ).observe(latency_ms)
+
+    # -------------------------------------------------------------- health
+    def health(self, scenario: str) -> str:
+        """A tenant's drift-health state (HEALTHY when unmonitored)."""
+        return self.tenant(scenario).health
+
+    def recalibrate(self, scenario: str, cycle: float | None = None) -> int:
+        """Manually hot-swap calibrate-back plans into one tenant's drivers.
+
+        Returns the cycle the recalibration was fitted at (default the
+        tenant's launch-counter estimate); see :meth:`_Tenant.recalibrate`.
+        """
+        return self.tenant(scenario).recalibrate(cycle)
 
     # ------------------------------------------------------------- results
     def harvest(self) -> Dict[int, RouterResult]:

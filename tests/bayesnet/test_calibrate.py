@@ -1,0 +1,162 @@
+"""Calibrate-back: compensation cancels drift, fits recover the generator.
+
+* **compensation** -- programming ``clean / error_factors`` thresholds makes
+  the drifted array land within a DAC step or two of the clean thresholds,
+  where the uncompensated array is tens of steps off at high wear.
+* **oracle-level accuracy** -- the compensated perturbed-CPT oracle sits
+  closer to the clean DAC-quantised posterior than the open-loop one.
+* **hot recalibration** -- ``recalibrated_network`` is a drop-in
+  ``swap_net`` target; ``recalibrate_driver`` defaults the cycle to the
+  driver's launch counter; clean networks refuse (nothing to calibrate).
+* **rollout fitting** -- ``fit_scene_config`` recovers the generating
+  :class:`SceneConfig` from counted confusion statistics within sampling
+  tolerance, and ``calibration_report`` quantifies bias/variance plus the
+  per-scenario DAC deviation of the rebuilt CPTs.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bayesnet import (
+    FrameDriver,
+    NoiseModel,
+    by_name,
+    calibration_report,
+    compensated_program,
+    compile_network,
+    fit_scene_config,
+    make_posterior_fn,
+    perturbed_cdf_rows,
+    recalibrate_driver,
+    recalibrated_network,
+    sample_evidence,
+)
+from repro.core import rng
+from repro.data.detection import SceneConfig
+
+KEY = jax.random.PRNGKey(11)
+NM = NoiseModel(seed=3, cycle=20.0, wear_tau=2.0, p_stuck_on=0.0, p_stuck_off=0.0)
+
+
+def _max_dev_vs_clean(spec, noise, program):
+    """Max |effective - clean| DAC threshold deviation across all nodes."""
+    eff = perturbed_cdf_rows(spec, noise, program=program)
+    dev = 0
+    for name in spec.topo_order():
+        clean = [rng.cdf_thresholds_int(r) for r in spec.cpt_rows(name)]
+        for crow, erow in zip(clean, eff[name]):
+            for c, e in zip(crow, erow):
+                dev = max(dev, abs(int(c) - int(e)))
+    return dev
+
+
+def test_compensated_program_cancels_predicted_drift():
+    spec = by_name("obstacle-class")
+    prog = compensated_program(spec, NM)
+    closed = _max_dev_vs_clean(spec, NM, prog)
+    open_loop = _max_dev_vs_clean(spec, NM, None)
+    assert closed <= 2
+    assert open_loop > 5
+    assert closed < open_loop
+
+
+def test_compensation_helps_at_any_cycle_for_static_terms():
+    # d2d + IR are cycle-independent, so even a cycle-0 compensation beats
+    # open loop at cycle 0 (the read-noise term is small there).
+    spec = by_name("pedestrian-night")
+    nm0 = NoiseModel(seed=5, cycle=0.0, wear_tau=2.0, p_stuck_on=0.0, p_stuck_off=0.0)
+    prog = compensated_program(spec, nm0)
+    assert _max_dev_vs_clean(spec, nm0, prog) <= _max_dev_vs_clean(spec, nm0, None)
+
+
+def test_compensated_oracle_closer_to_clean_posterior():
+    spec = by_name("obstacle-class")
+    ev = np.asarray(sample_evidence(spec, KEY, 8))
+    clean_fn = make_posterior_fn(spec, dac_quantize=True)
+    open_fn = make_posterior_fn(spec, noise=NM)
+    closed_fn = make_posterior_fn(
+        spec, noise=NM, program=compensated_program(spec, NM)
+    )
+    ref, _ = clean_fn(ev)
+    po, _ = open_fn(ev)
+    pc, _ = closed_fn(ev)
+    err_open = float(np.mean(np.abs(np.asarray(po) - np.asarray(ref))))
+    err_closed = float(np.mean(np.abs(np.asarray(pc) - np.asarray(ref))))
+    assert err_closed < err_open
+
+
+def test_recalibrated_network_is_dropin_and_programmed():
+    net = compile_network(
+        by_name("pedestrian-night"), 512, noise=NoiseModel(seed=2, wear_tau=2.0),
+        drift_epochs=2, devices=1,
+    )
+    recal = recalibrated_network(net, cycle=10.0)
+    assert recal.evidence == net.evidence
+    assert recal.query_cards == net.query_cards
+    assert recal.n_bits == net.n_bits
+    assert recal.drift_epochs == net.drift_epochs
+    assert recal.noise.cycle == 10.0
+    assert recal.program is not None and set(recal.program) == set(
+        net.spec.topo_order()
+    )
+
+
+def test_recalibrated_network_refuses_clean_nets():
+    net = compile_network(by_name("sensor-degradation"), 128, devices=1)
+    with pytest.raises(ValueError):
+        recalibrated_network(net, cycle=5.0)
+
+
+def test_recalibrate_driver_defaults_to_launch_counter():
+    spec = by_name("sensor-degradation")
+    net = compile_network(
+        spec, 256, noise=NoiseModel(seed=4, wear_tau=2.0), devices=1
+    )
+    drv = FrameDriver(net, max_batch=4, salt=13)
+    ev = np.asarray(sample_evidence(spec, KEY, 8))
+    drv.submit(ev)
+    out1 = drv.drain()
+    launches = drv.launches
+    assert launches > 0
+    swapped = recalibrate_driver(drv)
+    assert drv.net is swapped
+    assert swapped.noise.cycle == float(launches)
+    drv.submit(ev)
+    out2 = drv.drain()
+    assert len(out2) == len(out1)   # the swapped driver still serves
+
+
+def test_fit_scene_config_recovers_generator():
+    ref = SceneConfig()
+    fit = fit_scene_config(jax.random.PRNGKey(0), ref, n_scenes=40)
+    assert abs(fit.night_fraction - ref.night_fraction) <= 0.25
+    assert abs(fit.rgb_vis_day - ref.rgb_vis_day) <= 0.15
+    assert abs(fit.rgb_vis_night - ref.rgb_vis_night) <= 0.20
+    assert abs(fit.thermal_vis - ref.thermal_vis) <= 0.20
+    assert abs(fit.strong - ref.strong) <= 0.03
+    assert abs(fit.weak - ref.weak) <= 0.03
+    assert fit.strong > fit.weak
+    # geometry passes through untouched
+    assert (fit.height, fit.width, fit.n_obstacles) == (
+        ref.height, ref.width, ref.n_obstacles
+    )
+
+
+def test_calibration_report_structure_and_bounds():
+    rep = calibration_report(
+        jax.random.PRNGKey(1), n_scenes=24, repeats=2
+    )
+    assert set(rep["fields"]) == {
+        "night_fraction", "rgb_vis_day", "rgb_vis_night",
+        "thermal_vis", "strong", "weak",
+    }
+    for f, stats in rep["fields"].items():
+        assert stats["bias"] == pytest.approx(
+            stats["mean"] - stats["reference"]
+        )
+        assert stats["std"] >= 0.0
+    assert len(rep["scenario_dac_deviation"]) == 7
+    assert rep["max_dac_deviation"] == max(rep["scenario_dac_deviation"].values())
+    # a sane fit never rebuilds CPTs more than a quarter of the grid away
+    assert rep["max_dac_deviation"] <= 64

@@ -1,0 +1,253 @@
+"""Closed-loop crossbar health: drift epochs, DriftMonitor, hot-swap.
+
+* **epoched lowering** -- ``drift_epochs=1`` is bit-identical to the plain
+  noisy compile on every scenario (the PR-8 pin); ``drift_epochs>1`` splits
+  the stream across ``NoiseModel.with_cycle`` snapshots and its posteriors
+  match the exact word-weighted mixture oracle within stochastic error.
+* **wear model** -- ``wear_scale`` is exactly 1 at cycle 0 (the epochs=1 /
+  cycle-0 equivalence satellite), grows as sqrt thereafter, and scales
+  ``NoiseModel.read_cv_at``.
+* **DriftMonitor** -- stationary statistics stay HEALTHY, drifting ones
+  escalate HEALTHY -> DRIFTING -> RECALIBRATING, the RECALIBRATING latch
+  survives healthy observations until ``reset()``, and the whole machine is
+  a pure function of its observation stream (seeded-chaos replayable).
+* **hot-swap** -- ``swap_net`` between launches loses and reorders nothing:
+  in-flight launches harvest bit-identically to a never-swapped twin, and
+  reports pin the dispatched plan's n_bits, not the swapped one's.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.bayesnet import (
+    SCENARIOS,
+    DriftMonitor,
+    DriftPolicy,
+    FrameDriver,
+    HEALTH_DRIFTING,
+    HEALTH_HEALTHY,
+    HEALTH_RECALIBRATING,
+    NoiseModel,
+    RetryPolicy,
+    by_name,
+    compile_network,
+    make_posterior_fn,
+    sample_evidence,
+)
+from repro.core.device import DEFAULT_PARAMS, wear_scale
+from repro.kernels.net_sweep import epoch_word_bounds
+
+KEY = jax.random.PRNGKey(7)
+
+
+# --- epoch bookkeeping -------------------------------------------------------------
+
+def test_epoch_word_bounds_partitions_the_stream():
+    for w_words in (1, 7, 32, 128):
+        for epochs in (1, 2, 3, 5):
+            b = epoch_word_bounds(w_words, epochs)
+            assert len(b) == epochs + 1
+            assert b[0] == 0 and b[-1] == w_words
+            assert all(lo <= hi for lo, hi in zip(b, b[1:]))
+    assert epoch_word_bounds(8, 1) == (0, 8)
+    with pytest.raises(ValueError):
+        epoch_word_bounds(8, 0)
+
+
+def test_compile_validates_drift_epochs():
+    spec = by_name("sensor-degradation")
+    nm = NoiseModel(seed=1)
+    with pytest.raises(ValueError):
+        compile_network(spec, 128, noise=nm, drift_epochs=0)
+    with pytest.raises(ValueError):
+        # epochs > words: at least one word per epoch
+        compile_network(spec, 128, noise=nm, drift_epochs=5)
+    with pytest.raises(ValueError):
+        # epoched lowering needs a noise model to advance
+        compile_network(spec, 256, drift_epochs=2)
+
+
+# --- wear model (endurance/OU tie-in satellite) ------------------------------------
+
+def test_wear_scale_is_identity_at_cycle_zero():
+    assert wear_scale(0.0, 3.0) == 1.0
+    assert wear_scale(-1.0, 3.0) == 1.0
+    assert wear_scale(3.0, 3.0) == pytest.approx(np.sqrt(2.0))
+
+
+def test_read_cv_at_scales_with_wear():
+    nm = NoiseModel(seed=1, wear_tau=2.0)
+    assert nm.read_cv_at(0.0) == pytest.approx(nm.read_cv)
+    assert nm.read_cv_at(2.0) == pytest.approx(nm.read_cv * np.sqrt(2.0))
+    # default wear_tau derives from the endurance/readout device params
+    assert NoiseModel().wear_tau == pytest.approx(DEFAULT_PARAMS.wear_tau_epochs)
+
+
+# --- epochs=1 bit-identity pin (acceptance criterion) ------------------------------
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_drift_epochs_one_bit_identical(name):
+    spec = by_name(name)
+    nm = NoiseModel(seed=5, cycle=3.0, wear_tau=2.0)
+    ev = np.asarray(sample_evidence(spec, KEY, 4))
+    plain = compile_network(spec, 256, noise=nm, devices=1)
+    epoch1 = compile_network(spec, 256, noise=nm, drift_epochs=1, devices=1)
+    p0, a0 = plain.run(KEY, ev)
+    p1, a1 = epoch1.run(KEY, ev)
+    assert np.array_equal(np.asarray(p0), np.asarray(p1))
+    assert np.array_equal(np.asarray(a0), np.asarray(a1))
+
+
+# --- epochs>1: within-launch drift vs the mixture oracle ---------------------------
+
+def test_epoched_stream_matches_mixture_oracle():
+    spec = by_name("pedestrian-night")
+    nm = NoiseModel(seed=3, cycle=5.0, wear_tau=2.0)
+    n_bits, epochs = 4096, 4
+    net = compile_network(spec, n_bits, noise=nm, drift_epochs=epochs, devices=1)
+    ev = np.asarray(sample_evidence(spec, KEY, 6))
+    post, acc = net.run(KEY, ev)
+    post, acc = np.asarray(post), np.asarray(acc)
+
+    oracle = make_posterior_fn(
+        spec, noise=nm, drift_epochs=epochs, n_bits=n_bits
+    )
+    opost, _ = oracle(ev)
+    opost = np.asarray(opost)
+    sigma = np.sqrt(
+        np.clip(opost * (1 - opost), 1e-9, None) / np.maximum(acc, 1)[:, None]
+    )
+    assert np.all(np.abs(post - opost) <= 4.5 * sigma + 0.01)
+
+    # and the epoched stream is genuinely different from the frozen one
+    frozen = compile_network(spec, n_bits, noise=nm, devices=1)
+    fpost, _ = frozen.run(KEY, ev)
+    assert not np.array_equal(post, np.asarray(fpost))
+
+
+# --- the drift detector ------------------------------------------------------------
+
+def test_drift_monitor_stationary_stays_healthy():
+    mon = DriftMonitor(DriftPolicy(warmup=8))
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        st = mon.observe_launch(
+            0.9 + 0.01 * rng.standard_normal(),
+            0.5 + 0.01 * rng.standard_normal(),
+        )
+    assert st == HEALTH_HEALTHY and mon.alarms == 0
+
+
+def test_drift_monitor_escalates_and_latches():
+    mon = DriftMonitor(DriftPolicy(warmup=8, drift_h=3.0, recal_h=8.0))
+    rng = np.random.default_rng(1)
+    for _ in range(12):
+        mon.observe_launch(0.9 + 0.005 * rng.standard_normal(), 0.5)
+    assert mon.state == HEALTH_HEALTHY
+    saw_drifting = False
+    st = mon.state
+    for i in range(120):
+        st = mon.observe_launch(max(0.9 - 0.002 * i, 0.05), 0.5)
+        if st == HEALTH_DRIFTING:
+            saw_drifting = True
+        if st == HEALTH_RECALIBRATING:
+            break
+    assert st == HEALTH_RECALIBRATING and saw_drifting
+    # latched: healthy observations do not de-escalate until reset()
+    for _ in range(20):
+        st = mon.observe_launch(0.9, 0.5)
+    assert st == HEALTH_RECALIBRATING
+    mon.reset()
+    assert mon.state == HEALTH_HEALTHY and mon.resets == 1
+
+
+def test_drift_monitor_replay_deterministic():
+    obs = [(0.9 - 0.004 * i, 0.5 - 0.002 * i) for i in range(50)]
+    a = DriftMonitor(DriftPolicy(warmup=6))
+    b = DriftMonitor(DriftPolicy(warmup=6))
+    for conf, rate in obs:
+        assert a.observe_launch(conf, rate) == b.observe_launch(conf, rate)
+    assert a.peak_score == b.peak_score
+    assert a.as_dict() == b.as_dict()
+
+
+def test_drift_monitor_flip_channel_and_validation():
+    mon = DriftMonitor(DriftPolicy(warmup=4, drift_h=1.0, recal_h=2.0))
+    for _ in range(6):
+        mon.observe_flip(0.02)
+    for _ in range(30):
+        st = mon.observe_flip(0.5)
+        if st == HEALTH_RECALIBRATING:
+            break
+    assert st == HEALTH_RECALIBRATING
+    with pytest.raises(ValueError):
+        DriftPolicy(drift_h=5.0, recal_h=1.0)
+    with pytest.raises(ValueError):
+        DriftPolicy(warmup=0)
+
+
+def test_driver_feeds_monitor_per_launch():
+    spec = by_name("sensor-degradation")
+    net = compile_network(spec, 128, devices=1)
+    mon = DriftMonitor(DriftPolicy(warmup=32))
+    drv = FrameDriver(net, max_batch=4, salt=3, drift=mon)
+    ev = np.asarray(sample_evidence(spec, KEY, 10))
+    drv.submit(ev)
+    drv.drain()
+    assert mon.launches == drv.launches and mon.launches >= 3
+
+
+# --- hot-swap ordering guarantees (acceptance criterion) ---------------------------
+
+def test_hot_swap_loses_nothing_and_preserves_preswap_bits():
+    spec = by_name("pedestrian-night")
+    net = compile_network(spec, 512, devices=1)
+    ev = np.asarray(sample_evidence(spec, KEY, 12))
+    ref = FrameDriver(net, max_batch=4, salt=77)
+    swp = FrameDriver(net, max_batch=4, salt=77)
+    ref.submit(ev[:8]); swp.submit(ev[:8])
+    # two launches in flight on each driver, then swap one mid-air
+    ref.step(block=False); ref.step(block=False)
+    swp.step(block=False); swp.step(block=False)
+    net2 = compile_network(
+        spec, 512, noise=NoiseModel(seed=9, cycle=4.0, wear_tau=2.0), devices=1
+    )
+    swp.swap_net(net2)
+    out_ref, out_swp = ref.harvest(), swp.harvest()
+    assert set(out_ref) == set(out_swp)          # zero lost frames
+    for rid in out_ref:
+        assert np.array_equal(out_ref[rid][0], out_swp[rid][0])
+        assert out_ref[rid][1] == out_swp[rid][1]
+    # queued frames ride the new plan, in order, nothing dropped
+    rids = swp.submit(ev[8:])
+    out2 = swp.drain()
+    assert sorted(out2) == sorted(rids)
+    assert swp.net is net2
+
+
+def test_hot_swap_reports_pin_dispatch_time_n_bits():
+    spec = by_name("sensor-degradation")
+    net = compile_network(spec, 256, devices=1)
+    drv = FrameDriver(
+        net, max_batch=8, salt=5, retry=RetryPolicy(min_confidence=0.0)
+    )
+    ev = np.asarray(sample_evidence(spec, KEY, 4))
+    rids = drv.submit(ev)
+    drv.step(block=False)
+    drv.swap_net(compile_network(spec, 512, devices=1))
+    out = drv.harvest()
+    assert sorted(out) == sorted(rids)
+    # the launch dispatched at 256 bits: its reports must say so even though
+    # the driver's current net is the 512-bit swap-in
+    assert all(drv.reports[r].n_bits == 256 for r in rids)
+
+
+def test_hot_swap_validates_layout():
+    net = compile_network(by_name("sensor-degradation"), 128, devices=1)
+    other = compile_network(by_name("pedestrian-night"), 128, devices=1)
+    drv = FrameDriver(net, max_batch=4, salt=1)
+    with pytest.raises(ValueError):
+        drv.swap_net(other)
+    with pytest.raises(TypeError):
+        drv.swap_net("not a network")

@@ -251,3 +251,92 @@ def test_watchdog_default_quiet_on_uniform_launches():
     d.submit(np.zeros((4, 1), np.int32))
     d.drain()
     assert d.stats.slow_launches == 0
+
+
+# --- stats merge algebra + mixed drift/chaos accounting (DESIGN §15) ---------------
+
+def _rand_stats(rng):
+    s = ReliabilityStats()
+    for _ in range(int(rng.integers(1, 16))):
+        s.record_frame(
+            float(rng.random()), int(rng.integers(0, 3)),
+            int(rng.integers(32, 4096)), bool(rng.integers(0, 2)),
+        )
+    s.launches += int(rng.integers(0, 5))
+    s.slow_launches += int(rng.integers(0, 2))
+    s.launch_failures += int(rng.integers(0, 3))
+    return s
+
+
+def test_stats_merge_is_associative():
+    import copy
+    import dataclasses as dc
+
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        a, b, c = _rand_stats(rng), _rand_stats(rng), _rand_stats(rng)
+        left = copy.deepcopy(a)
+        left.merge(b)
+        left.merge(c)
+        bc = copy.deepcopy(b)
+        bc.merge(c)
+        right = copy.deepcopy(a)
+        right.merge(bc)
+        dl, dr = dc.asdict(left), dc.asdict(right)
+        # float summation reassociates: compare the sum to tolerance, the
+        # counters exactly
+        assert dl.pop("confidence_sum") == pytest.approx(
+            dr.pop("confidence_sum")
+        )
+        assert dl == dr
+        # and the identity element really is the empty stats
+        ident = copy.deepcopy(a)
+        ident.merge(ReliabilityStats())
+        assert dc.asdict(ident) == dc.asdict(a)
+
+
+def test_mixed_drift_chaos_every_frame_terminates_exactly_once():
+    """Seeded chaos + a drifting noise model + auto-recalibration: the fleet
+    still terminates every frame in exactly one of OK / DEGRADED /
+    UNRELIABLE / REJECTED, and per-driver stats merge consistently."""
+    import copy
+
+    from repro.bayesnet import DriftPolicy
+    from repro.bayesnet.reliability import TERMINAL_STATUSES
+    from repro.distributed.fault import LaunchFaultInjector
+    from repro.serve import BayesRouter, RouterPolicy
+
+    r = BayesRouter(
+        RouterPolicy(
+            backoff_base_s=1e-4, backoff_cap_s=2e-3, breaker_cooldown_s=0.01,
+        ),
+        jax.random.PRNGKey(21),
+        n_bits=256, max_batch=8,
+        retry=RetryPolicy(max_retries=1, max_n_bits=1024),
+        fault=LaunchFaultInjector(seed=5, p_drop=0.08, p_corrupt=0.08),
+        drift=DriftPolicy(warmup=3, drift_h=0.5, recal_h=1.0),
+    )
+    name = "pedestrian-night"
+    r.register(name, noise=NoiseModel(seed=7, cycle=0.0, wear_tau=1.0))
+    spec = by_name(name)
+    gen = np.random.default_rng(3)
+    rids = []
+    for _ in range(5):
+        frames = gen.integers(0, 2, size=(9, len(spec.evidence)), dtype=np.int32)
+        rids.extend(r.submit(name, frames))
+        r.drain()
+    assert sorted(r.results) == sorted(rids)           # exactly once each
+    counts = r.status_counts()
+    assert sum(counts.values()) == len(rids)
+    assert set(counts) == set(TERMINAL_STATUSES)
+    t = r.tenant(name)
+    # the drifting tenant actually recalibrated under chaos, losing nothing
+    assert t.recalibrations >= 1
+    # per-driver stats merge associatively into the fleet view: every frame
+    # that reached a driver (i.e. all but admission-time REJECTED) is
+    # accounted exactly once across all rung drivers
+    stats = [copy.deepcopy(d.stats) for d in t.drivers.values()]
+    total = ReliabilityStats()
+    for s in stats:
+        total.merge(s)
+    assert total.frames == len(rids) - counts["REJECTED"]

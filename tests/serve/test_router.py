@@ -298,3 +298,115 @@ def test_metrics_and_status_accounting():
     assert counts["OK"] == 3 and counts["REJECTED"] == 1
     for rid in rids:
         assert r.results[rid].deadline_met
+
+
+# --- crossbar health: retry clamp, drift monitor, recalibration (DESIGN §15) -------
+
+def test_degraded_rung_clamps_retry_escalation():
+    from repro.bayesnet.reliability import RetryPolicy
+
+    pol = RouterPolicy(capacity=2, max_degrade=2, min_n_bits=32, **FAST)
+    r = BayesRouter(
+        pol, KEY, n_bits=512, max_batch=4,
+        retry=RetryPolicy(
+            min_confidence=0.9999, max_retries=2, escalation=4,
+            max_n_bits=1 << 16,
+        ),
+    )
+    name = "sensor-degradation"
+    rids = r.submit(name, _frames(name, 9))
+    r.drain()
+    t = r.tenant(name)
+    assert any(level > 0 for level in t.drivers)
+    clamped_reports = []
+    for level, drv in t.drivers.items():
+        rung = t.n_bits_for(level)
+        if level == 0:
+            # nominal rung keeps the caller's escalation headroom
+            assert drv.retry.max_n_bits == 1 << 16
+            continue
+        # the DEGRADED rung's ladder is clamped to its own fidelity cut
+        assert drv.retry.max_n_bits == rung
+        for rep in drv.reports.values():
+            assert rep.n_bits <= rung
+            if rep.attempts > 1:
+                clamped_reports.append(rep)
+    # escalated frames on a degraded rung carry the collision flag
+    assert clamped_reports and all(
+        rep.escalation_clamped for rep in clamped_reports
+    )
+
+
+def test_drift_monitor_auto_recalibrates_tenant():
+    from repro.bayesnet import DriftPolicy, NoiseModel
+    from repro.bayesnet.reliability import HEALTH_RECALIBRATING
+
+    r = BayesRouter(
+        RouterPolicy(**FAST), KEY, n_bits=256, max_batch=8,
+        drift=DriftPolicy(warmup=2),
+    )
+    name = "pedestrian-night"
+    r.register(name, noise=NoiseModel(seed=9, cycle=0.0, wear_tau=1.0))
+    assert r.health(name) == "HEALTHY"
+    rids = list(r.submit(name, _frames(name, 8)))
+    r.drain()
+    t = r.tenant(name)
+    assert t.monitor.launches >= 1                   # the driver feeds the monitor
+    # force the latch (a statistically-guaranteed trip needs thousands of
+    # launches; the trip -> swap -> reset plumbing is what's under test)
+    t.monitor.state = HEALTH_RECALIBRATING
+    rids.extend(r.submit(name, _frames(name, 8, seed=1)))
+    r.drain()
+    assert t.recalibrations == 1                     # the pump recalibrated
+    assert r.health(name) == "HEALTHY"               # reset after the swap
+    assert sorted(r.results) == sorted(rids)         # recalibration lost nothing
+    assert all(r.results[rid].status == "OK" for rid in rids)
+    # the swapped-in plans are calibrate-back twins at the tenant's cycle
+    assert all(d.net.program is not None for d in t.drivers.values())
+
+
+def test_manual_recalibrate_and_clean_tenant_refuses():
+    from repro.bayesnet import DriftPolicy, NoiseModel
+
+    r = BayesRouter(
+        RouterPolicy(**FAST), KEY, n_bits=128, max_batch=4,
+        drift=DriftPolicy(warmup=64),   # detector effectively off
+    )
+    noisy = "lane-change"
+    r.register(noisy, noise=NoiseModel(seed=4, wear_tau=2.0))
+    r.submit(noisy, _frames(noisy, 4))
+    r.drain()
+    t = r.tenant(noisy)
+    cycle = r.recalibrate(noisy)
+    assert t.recalibrations == 1 and cycle == t.cycle_estimate()
+    # a clean tenant has no drift to calibrate back
+    clean = r.register("intersection")
+    with pytest.raises(ValueError):
+        r.recalibrate(clean)
+    # unmonitored routers report HEALTHY rather than raising
+    r2 = BayesRouter(RouterPolicy(**FAST), KEY, n_bits=128, max_batch=4)
+    r2.register("intersection")
+    assert r2.health("intersection") == "HEALTHY"
+    assert r2.tenant("intersection").monitor is None
+
+
+def test_auto_recalibrate_off_leaves_latch_visible():
+    from repro.bayesnet import DriftPolicy, NoiseModel
+
+    from repro.bayesnet.reliability import HEALTH_RECALIBRATING
+
+    r = BayesRouter(
+        RouterPolicy(**FAST), KEY, n_bits=256, max_batch=8,
+        drift=DriftPolicy(warmup=2),
+        auto_recalibrate=False,
+    )
+    name = "pedestrian-night"
+    r.register(name, noise=NoiseModel(seed=9, cycle=0.0, wear_tau=1.0))
+    r.submit(name, _frames(name, 8))
+    r.drain()
+    t = r.tenant(name)
+    t.monitor.state = HEALTH_RECALIBRATING
+    r.submit(name, _frames(name, 8, seed=1))
+    r.drain()
+    assert t.recalibrations == 0
+    assert r.health(name) == "RECALIBRATING"         # latched for the operator
